@@ -1,0 +1,88 @@
+"""FM-index query serving throughput + rank_select kernel comparison.
+
+Derived columns: queries/second for batched backward search (the serving
+path), and the Pallas rank_select kernel (interpret mode) vs its jnp oracle
+on identical query batches — on real TPU the kernel's scalar-prefetch DMA
+is the win; interpret mode only certifies correctness-at-speed parity.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import alphabet as al
+from repro.core.bwt import bwt
+from repro.core.fm_index import PAD, build_fm_index, count
+from repro.data.corpus import corpus
+
+
+def _bench(fn, *args, reps=5):
+    fn(*args).block_until_ready()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn(*args).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def query_throughput(n=1 << 16, batches=(64, 512), pattern_len=16):
+    toks = corpus("dna", n - 1)
+    s = al.append_sentinel(toks)
+    sigma = al.sigma_of(s)
+    b, row = bwt(jnp.asarray(s), sigma)
+    fm = build_fm_index(b, row, sigma, sample_rate=64)
+    rng = np.random.default_rng(0)
+    rows = []
+    for B in batches:
+        pats = np.full((B, pattern_len), PAD, np.int32)
+        lens = rng.integers(4, pattern_len + 1, B)
+        for i, L in enumerate(lens):
+            st = rng.integers(0, n - L - 2)
+            pats[i, :L] = s[st : st + L]  # mostly-hitting queries
+        t = _bench(lambda p: count(fm, p), jnp.asarray(pats))
+        rows.append({"batch": B, "s_per_call": t, "qps": B / t})
+    return rows
+
+
+def kernel_vs_ref(nblocks=256, r=64, B=1024):
+    from repro.kernels import ops, ref
+
+    rng = np.random.default_rng(1)
+    bwt_blocks = jnp.asarray(rng.integers(0, 6, (nblocks, r)).astype(np.int32))
+    bidx = jnp.asarray(rng.integers(0, nblocks, B).astype(np.int32))
+    c = jnp.asarray(rng.integers(0, 6, B).astype(np.int32))
+    cut = jnp.asarray(rng.integers(0, r + 1, B).astype(np.int32))
+    t_kernel = _bench(
+        lambda *a: ops.rank_select(*a), bwt_blocks, bidx, c, cut
+    )
+    ref_jit = jax.jit(ref.rank_select_ref)
+    t_ref = _bench(lambda *a: ref_jit(*a), bwt_blocks, bidx, c, cut)
+    same = np.array_equal(
+        np.asarray(ops.rank_select(bwt_blocks, bidx, c, cut)),
+        np.asarray(ref_jit(bwt_blocks, bidx, c, cut)),
+    )
+    return {"kernel_us": t_kernel * 1e6, "ref_us": t_ref * 1e6,
+            "match": bool(same)}
+
+
+def main():
+    print("fmbench,metric,value,derived")
+    for r in query_throughput():
+        print(
+            f"fmbench,count_b{r['batch']},{r['s_per_call'] * 1e6:.0f},"
+            f"qps={r['qps']:.0f}"
+        )
+    k = kernel_vs_ref()
+    print(
+        f"fmbench,rank_select_interpret,{k['kernel_us']:.0f},"
+        f"ref_us={k['ref_us']:.0f};match={k['match']}"
+    )
+
+
+if __name__ == "__main__":
+    main()

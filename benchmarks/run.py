@@ -1,0 +1,50 @@
+"""Benchmark harness: one section per paper table/figure + system ablations.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus per-bench headers).
+
+  table2     paper Table 2 — ours vs Menon et al. competitor (wall time)
+  sortbench  DESIGN.md §4 sort-engine ablation (collective volume, derived)
+  fmbench    FM-index serving throughput + rank_select kernel
+  roofline   index-build + LM roofline terms (from dry-run JSONs, if present)
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _roofline_section():
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "dryrun")
+    files = sorted(glob.glob(os.path.join(out_dir, "*.json")))
+    if not files:
+        print("roofline,none,0,run `python -m repro.launch.dryrun` first")
+        return
+    print("roofline,cell,step_time_us,bottleneck;compute_s;memory_s;collective_s")
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        if r.get("status") != "compiled":
+            continue
+        roof = r.get("roofline", {})
+        print(
+            f"roofline,{r['arch']}__{r['shape']}__{r['mesh']},"
+            f"{roof.get('step_time_s', 0) * 1e6:.0f},"
+            f"{roof.get('bottleneck', '-')};{roof.get('compute_s', 0):.4f};"
+            f"{roof.get('memory_s', 0):.4f};{roof.get('collective_s', 0):.4f}"
+        )
+
+
+def main() -> None:
+    from . import fm_query_bench, sort_bench, table2_bwt
+
+    table2_bwt.main()
+    sort_bench.main()
+    fm_query_bench.main()
+    _roofline_section()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Distributed-sort engine ablation: bitonic merge-exchange vs sample sort.
+
+Wall time on one CPU core is meaningless for collectives, so the DERIVED
+metric is per-device collective traffic (parsed from the compiled HLO of an
+8-virtual-device run, the same parser the roofline uses) plus single-device
+local-sort wall time as the compute proxy.
+
+The volumes verify the DESIGN.md §4 analysis: bitonic moves
+m*log2(P)*(log2(P)+1)/2 per sort vs samplesort's ~(beta+1)*m, so samplesort
+wins on traffic at P >= 8 unless skew forces capacity retries.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_PROBE = r"""
+import os, sys, json
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+sys.path.insert(0, os.path.join(os.getcwd(), "src"))
+from jax.sharding import PartitionSpec as P
+from repro.core.dist_sort import ShardInfo, bitonic_sort_sharded, samplesort_sharded
+from repro.launch.roofline import collective_bytes
+
+P_DEV = 8
+M = 1 << 12
+info = ShardInfo("parts", P_DEV, M)
+mesh = jax.make_mesh((P_DEV,), ("parts",))
+
+def bitonic(a, b, c):
+    return bitonic_sort_sharded(info, (a, b, c), num_keys=2)
+
+def sample(a, b, c):
+    r = samplesort_sharded(info, (a, b, c), num_keys=2, capacity_factor=2.0)
+    return r.operands
+
+out = {}
+for name, fn, nout in (("bitonic", bitonic, 3), ("samplesort", sample, 3)):
+    f = jax.jit(jax.shard_map(fn, mesh=mesh,
+                              in_specs=(P("parts"),) * 3,
+                              out_specs=(P("parts"),) * nout))
+    args = [jax.ShapeDtypeStruct((P_DEV * M,), jnp.int32,
+            sharding=jax.sharding.NamedSharding(mesh, P("parts")))] * 3
+    compiled = f.lower(*args).compile()
+    stats = collective_bytes(compiled.as_text())
+    out[name] = {"bytes_per_device": stats.total_bytes,
+                 "counts": stats.counts}
+print(json.dumps(out))
+"""
+
+
+def collective_volumes():
+    proc = subprocess.run(
+        [sys.executable, "-c", _PROBE], capture_output=True, text=True,
+        timeout=600,
+        env={k: v for k, v in os.environ.items() if k != "XLA_FLAGS"},
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-2000:])
+    import json
+
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def local_sort_time(n=1 << 18, reps=3):
+    rng = np.random.default_rng(0)
+    k1 = jnp.asarray(rng.integers(0, 1 << 30, n).astype(np.int32))
+    k2 = jnp.asarray(rng.integers(0, 1 << 30, n).astype(np.int32))
+    pay = jnp.arange(n, dtype=jnp.int32)
+    f = jax.jit(lambda a, b, c: jax.lax.sort((a, b, c), num_keys=2))
+    f(k1, k2, pay)[0].block_until_ready()
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        f(k1, k2, pay)[0].block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def main():
+    vols = collective_volumes()
+    t_local = local_sort_time()
+    print("sortbench,engine,bytes_per_device,collective_ops,local_sort_us")
+    for eng, d in vols.items():
+        nops = sum(d["counts"].values())
+        print(
+            f"sortbench,{eng},{d['bytes_per_device']},{nops},"
+            f"{t_local * 1e6:.0f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""repro: distributed BWT sequence indexing on TPU pods (JAX + Pallas),
+integrated with a multi-pod LM training/serving framework.
+
+Reproduction of Randazzo & Rombo 2020 — see README.md / DESIGN.md.
+"""
+
+__version__ = "1.0.0"

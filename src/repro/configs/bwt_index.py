@@ -1,0 +1,33 @@
+"""The paper's own workload as a first-class config: distributed BWT index
+construction + FM-index query serving.
+
+``train_step`` analogue = one prefix-doubling build over an n-token string;
+``serve_step`` = batched FM backward-search counting.  The dry-run lowers
+both on the production mesh (string sharded over every chip).
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BWTIndexConfig:
+    name: str = "bwt_index"
+    family: str = "index"
+    n: int = 1 << 28              # 256 Mi tokens (PROTEINS/DNA-scale, §3)
+    sigma: int = 257              # byte alphabet + sentinel
+    engine: str = "samplesort"    # paper-faithful range shuffle by default
+    capacity_factor: float = 2.0
+    sample_rate: int = 64         # FM Occ checkpoint spacing
+    query_batch: int = 1024
+    query_len: int = 32
+    rounds: int | None = None     # None -> ceil(log2 n)
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+CONFIG = BWTIndexConfig()
+
+
+def reduced() -> BWTIndexConfig:
+    return CONFIG.replace(n=1 << 12, query_batch=8, query_len=8, rounds=None)

@@ -1,0 +1,15 @@
+"""Core library: the paper's contribution — distributed BWT/FM indexing.
+
+Public API:
+    alphabet            token/alphabet conventions (sentinel = 0)
+    suffix_array        single-device prefix doubling (reference)
+    bwt                 BWT from SA + inverse (validation)
+    fm_index            C array, sampled Occ, backward search
+    competitor          Menon et al. MapReduce indexing (paper's baseline)
+    dist_sort           distributed sort engines + scans (shard_map)
+    dist_suffix_array   distributed prefix doubling + BWT
+    dist_fm             sharded FM index, psum rank queries
+    pipeline            end-to-end build_index() / SequenceIndex
+"""
+
+from .pipeline import SequenceIndex, build_index  # noqa: F401

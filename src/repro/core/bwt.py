@@ -1,0 +1,71 @@
+"""Burrows-Wheeler transform from the suffix array, and its inverse.
+
+The paper (§2.2) derives the BWT from the suffix array "in a MapReduce
+fashion via join operation":  bwt[i] = S[(SA[i] - 1) mod n].  The row index
+``I`` of the original string is the position where SA[i] == 0.
+
+The inverse transform (LF-mapping walk) is implemented as a validation
+oracle: BWT must be reversible (paper §2.1, "it is reversible").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .suffix_array import suffix_array
+
+
+@jax.jit
+def bwt_from_sa(s: jax.Array, sa: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(bwt, I): last column of the sorted rotation matrix + original row."""
+    n = s.shape[0]
+    prev = jnp.mod(sa - 1, n)
+    bwt = s[prev]
+    row = jnp.argmin(sa).astype(jnp.int32)  # position where sa == 0
+    return bwt, row
+
+
+@functools.partial(jax.jit, static_argnames=("sigma",))
+def bwt(s: jax.Array, sigma: int) -> tuple[jax.Array, jax.Array]:
+    """End-to-end single-device BWT (reference path)."""
+    return bwt_from_sa(s, suffix_array(s, sigma))
+
+
+@functools.partial(jax.jit, static_argnames=("sigma",))
+def lf_mapping(bwt_arr: jax.Array, sigma: int) -> jax.Array:
+    """LF[i] = C[bwt[i]] + occ(bwt[i], i)  (rank of bwt[i] among equal chars
+    up to and including position i, minus one)."""
+    counts = jnp.bincount(bwt_arr, length=sigma)
+    c_array = jnp.cumsum(counts) - counts  # exclusive: chars < c
+    onehot = jax.nn.one_hot(bwt_arr, sigma, dtype=jnp.int32)
+    occ_incl = jnp.cumsum(onehot, axis=0)  # occ(c, 0..i) inclusive
+    rank = jnp.take_along_axis(occ_incl, bwt_arr[:, None], axis=1)[:, 0] - 1
+    return (c_array[bwt_arr] + rank).astype(jnp.int32)
+
+
+def inverse_bwt(bwt_arr: jax.Array, row: jax.Array, sigma: int) -> jax.Array:
+    """Reconstruct the original string by walking the LF mapping backwards
+    from the row of the original rotation.  O(n * sigma) memory — a test
+    oracle, not a production path."""
+    n = bwt_arr.shape[0]
+    lf = lf_mapping(bwt_arr, sigma)
+
+    def step(i, _):
+        return lf[i], bwt_arr[i]
+
+    _, rev = jax.lax.scan(step, row, None, length=n)
+    return rev[::-1]
+
+
+def bwt_naive(s) -> tuple["np.ndarray", int]:  # noqa: F821 - numpy oracle
+    """Rotation-sorting oracle (Figure 1 of the paper)."""
+    import numpy as np
+
+    s = np.asarray(s)
+    n = len(s)
+    rotations = sorted(range(n), key=lambda i: np.concatenate([s[i:], s[:i]]).tolist())
+    last = np.array([s[(i - 1) % n] for i in rotations], dtype=s.dtype)
+    return last, rotations.index(0)

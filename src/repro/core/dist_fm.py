@@ -1,0 +1,162 @@
+"""Distributed FM-index: sharded BWT + rank queries via masked psum.
+
+Scale story (DESIGN.md §2): for genome/corpus-scale indexes the BWT does not
+fit one device, so it stays sharded over the mesh ``parts`` axis.  A rank
+query Occ(c, p) decomposes over position ranges:
+
+    Occ(c, p) = Σ_d  count of c in  (device d's range ∩ [0, p))
+
+Each device answers from its local checkpoints (+ one in-block scan), and a
+single ``psum`` combines the partials — O(B) bytes of collective traffic per
+backward-search step for a batch of B queries, independent of n.
+
+``serve_step`` (batched pattern counting) is the inference path lowered in
+the multi-pod dry-run for the ``bwt_index`` config.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .fm_index import PAD
+
+AXIS = "parts"
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DistFMIndex:
+    """Global arrays carry NamedShardings; static metadata rides as aux."""
+
+    bwt: jax.Array          # int32[n]            sharded over parts
+    occ_samples: jax.Array  # int32[nblocks, sigma] sharded (exclusive, per-shard)
+    c_array: jax.Array      # int32[sigma]        replicated
+    row: jax.Array          # int32 scalar        replicated
+    sample_rate: int
+    sigma: int
+    length: int
+    parts: int
+
+    def tree_flatten(self):
+        return ((self.bwt, self.occ_samples, self.c_array, self.row),
+                (self.sample_rate, self.sigma, self.length, self.parts))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def _build_local(bwt_local: jax.Array, *, sigma: int, sample_rate: int):
+    """Per-shard exclusive Occ checkpoints + local totals."""
+    m = bwt_local.shape[0]
+    r = sample_rate
+    nblocks = m // r
+    onehot = (bwt_local[:, None] == jnp.arange(sigma)[None, :]).astype(jnp.int32)
+    block_counts = onehot.reshape(nblocks, r, sigma).sum(axis=1)
+    cum = jnp.cumsum(block_counts, axis=0)
+    occ_local = jnp.concatenate([jnp.zeros((1, sigma), jnp.int32), cum[:-1]])
+    totals = cum[-1]
+    counts = lax.psum(totals, AXIS)
+    c_array = jnp.cumsum(counts) - counts
+    return occ_local, c_array.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "sample_rate", "mesh"))
+def _build_jit(bwt, sigma, sample_rate, mesh):
+    fn = functools.partial(_build_local, sigma=sigma, sample_rate=sample_rate)
+    return jax.shard_map(
+        fn, mesh=mesh, in_specs=P(AXIS), out_specs=(P(AXIS), P())
+    )(bwt)
+
+
+def build_dist_fm_index(
+    bwt, row, mesh: Mesh, *, sigma: int, sample_rate: int = 64
+) -> DistFMIndex:
+    n = bwt.shape[0]
+    parts = mesh.shape[AXIS]
+    if (n % parts) or ((n // parts) % sample_rate):
+        raise ValueError(
+            f"n={n} must be divisible by parts*sample_rate={parts}*{sample_rate}"
+        )
+    bwt = jax.device_put(bwt, NamedSharding(mesh, P(AXIS)))
+    occ_samples, c_array = _build_jit(bwt, sigma, sample_rate, mesh)
+    return DistFMIndex(
+        bwt, occ_samples, c_array, jnp.asarray(row, jnp.int32),
+        sample_rate, sigma, n, parts,
+    )
+
+
+def _occ_partial(bwt_local, occ_local, c, p, *, m, r):
+    """count of character c in (my range ∩ [0, p)) — vectorised over queries.
+
+    bwt_local int32[m], occ_local int32[m/r, sigma]; c, p int32[B].
+    """
+    me = lax.axis_index(AXIS)
+    p_loc = jnp.clip(p - me * m, 0, m)          # clip into my range
+    block = jnp.minimum(p_loc // r, m // r - 1)
+    base = occ_local[block, c]                   # (B,)
+    start = block * r
+    window = bwt_local[start[:, None] + jnp.arange(r)[None, :]]   # (B, r)
+    inblock = jnp.sum(
+        (window == c[:, None]) & (start[:, None] + jnp.arange(r)[None, :] < p_loc[:, None]),
+        axis=1,
+    )
+    # p_loc == m: block = m//r - 1, inblock counts the whole last block, so
+    # base + inblock covers exactly [0, m) — no tail case needed.
+    return (base + inblock).astype(jnp.int32)
+
+
+def _search_local(bwt_local, occ_local, c_array, patterns, *, m, r, n):
+    """shard_map body: batched backward search over replicated patterns."""
+
+    def step(state, c):
+        sp, ep = state
+        sigma = c_array.shape[0]
+        in_alphabet = (c >= 1) & (c < sigma)
+        valid = in_alphabet & (ep > sp)
+        c_safe = jnp.where(in_alphabet, c, 0)
+        occ_sp = lax.psum(_occ_partial(bwt_local, occ_local, c_safe, sp, m=m, r=r), AXIS)
+        occ_ep = lax.psum(_occ_partial(bwt_local, occ_local, c_safe, ep, m=m, r=r), AXIS)
+        nsp = c_array[c_safe] + occ_sp
+        nep = c_array[c_safe] + occ_ep
+        sp = jnp.where(valid, nsp, sp)
+        # out-of-alphabet symbols (not PAD) empty the interval permanently
+        ep = jnp.where(valid, nep, jnp.where((c != PAD) & ~in_alphabet, sp, ep))
+        return (sp, ep), None
+
+    B = patterns.shape[0]
+    init = (jnp.zeros(B, jnp.int32), jnp.full((B,), n, jnp.int32))
+    # scan right-to-left over pattern positions (PADs on the right come first)
+    (sp, ep), _ = lax.scan(step, init, patterns.T[::-1])
+    return sp, ep
+
+
+@functools.partial(jax.jit, static_argnames=("index_static", "mesh"))
+def _count_jit(index_arrays, patterns, index_static, mesh):
+    sample_rate, sigma, n, parts = index_static
+    bwt, occ_samples, c_array, _row = index_arrays
+    m = n // parts
+    fn = functools.partial(
+        _search_local, m=m, r=sample_rate, n=n
+    )
+    sp, ep = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(), P()),
+        out_specs=(P(), P()),
+    )(bwt, occ_samples, c_array, patterns)
+    return jnp.maximum(ep - sp, 0)
+
+
+def dist_count(index: DistFMIndex, patterns, mesh: Mesh) -> jax.Array:
+    """Batched exact-match counts over the sharded index.
+
+    ``patterns``: int32[B, L], PAD-padded on the right, replicated.
+    """
+    arrays, aux = index.tree_flatten()
+    return _count_jit(arrays, jnp.asarray(patterns), aux, mesh)

@@ -1,0 +1,361 @@
+"""Distributed sorting / scanning primitives for TPU meshes.
+
+These functions are called INSIDE ``shard_map`` over a 1-D device axis
+(``info.axis``) and operate on the local shard view.  They implement the
+Spark-shuffle equivalents from DESIGN.md §4:
+
+* ``bitonic_sort_sharded`` — Batcher bitonic merge-exchange across devices
+  (deterministic buffer sizes, ``log²P`` ppermute rounds; the beyond-paper
+  engine — SPMD-native, no capacity assumptions).
+* ``samplesort_sharded`` — the paper-faithful range-partitioned sample sort:
+  regular splitter sampling + capacity-bounded ``all_to_all`` shuffle.
+  Overflow is reported, not hidden (Spark would spill; ICI cannot).
+* ``exclusive_scan_sharded`` / ``exclusive_max_sharded`` — distributed
+  exclusive scans of per-shard aggregates (the "offset of the previous
+  partitions" of the paper's Re-Ranking step).
+* ``shift_sharded`` — the distributed roll that implements the paper's
+  "Shifting" map (rank[i + h]) with two neighbour ppermutes.
+
+All collective permutations use static perms (ppermute requirement); the
+prefix-doubling driver therefore unrolls over ``h`` (h is a power of two,
+known per round).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+INT_PAD = jnp.iinfo(jnp.int32).max  # pad key that sorts after every real key
+
+
+class ShardInfo(NamedTuple):
+    """Static description of the sharded 1-D array layout."""
+
+    axis: str        # mesh axis name the array is sharded over
+    parts: int       # number of shards P (must be a power of two for bitonic)
+    part_size: int   # local elements m; global n = P * m
+
+    @property
+    def n(self) -> int:
+        return self.parts * self.part_size
+
+
+def _me(info: ShardInfo) -> jax.Array:
+    return lax.axis_index(info.axis)
+
+
+# ---------------------------------------------------------------------------
+# distributed exclusive scans (per-shard aggregates)
+# ---------------------------------------------------------------------------
+
+def exclusive_scan_sharded(info: ShardInfo, local_agg: jax.Array) -> jax.Array:
+    """Sum of ``local_agg`` over all devices with smaller axis index.
+
+    ``local_agg`` may be scalar or have trailing dims (e.g. per-character
+    count vectors for the distributed Occ table).
+    """
+    gathered = lax.all_gather(local_agg, info.axis)  # (P, ...)
+    mask = jnp.arange(info.parts) < _me(info)
+    mask = mask.reshape((info.parts,) + (1,) * (gathered.ndim - 1))
+    return jnp.sum(jnp.where(mask, gathered, 0), axis=0)
+
+
+def exclusive_max_sharded(
+    info: ShardInfo, local_agg: jax.Array, identity: int = -1
+) -> jax.Array:
+    """Max of ``local_agg`` over devices with smaller axis index."""
+    gathered = lax.all_gather(local_agg, info.axis)
+    mask = jnp.arange(info.parts) < _me(info)
+    mask = mask.reshape((info.parts,) + (1,) * (gathered.ndim - 1))
+    return jnp.max(jnp.where(mask, gathered, identity), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# distributed shift (the paper's "Shifting and Pairing" map)
+# ---------------------------------------------------------------------------
+
+def shift_sharded(
+    info: ShardInfo, x: jax.Array, h: int, fill: int
+) -> jax.Array:
+    """out[g] = x[g + h] for global g, ``fill`` past the end.
+
+    ``h`` is static (one prefix-doubling round = one power of two), so the
+    ppermute perms are static: the data for any destination shard lives on at
+    most two source shards (DESIGN.md §2 table, "distributed roll").
+    """
+    P, m = info.parts, info.part_size
+    q, rs = divmod(h, m)
+    if q >= P:  # the whole shard is past the end
+        return jnp.full_like(x, fill)
+
+    # I receive the shard of device (me + q); sender i sends to (i - q).
+    perm_a = [(i, (i - q) % P) for i in range(P)]
+    a = lax.ppermute(x, info.axis, perm_a) if q % P != 0 else x
+    if rs == 0:
+        out = a
+    else:
+        perm_b = [(i, (i - q - 1) % P) for i in range(P)]
+        b = lax.ppermute(x, info.axis, perm_b)
+        out = jnp.concatenate([a[rs:], b[:rs]])
+
+    gidx = _me(info) * m + jnp.arange(m, dtype=jnp.int32)
+    return jnp.where(gidx + h < info.n, out, fill)
+
+
+# ---------------------------------------------------------------------------
+# engine 1: bitonic merge-exchange
+# ---------------------------------------------------------------------------
+
+def _merge_split(
+    info: ShardInfo,
+    operands: tuple[jax.Array, ...],
+    num_keys: int,
+    j: int,
+    keep_low: jax.Array,
+    is_lower: jax.Array,
+):
+    """Exchange full shards with partner ``me ^ j``; keep low or high half of
+    the merged 2m block.  ``lax.sort`` with multiple key operands gives the
+    lexicographic order (avoids int64 key packing, which TPUs dislike).
+
+    Both partners must sort the SAME sequence: lax.sort is stable, so with
+    tied keys the payload order depends on concatenation order.  Canonical
+    order = lower device's shard first on both sides, which makes the kept
+    halves exactly complementary."""
+    m = info.part_size
+    perm = [(i, i ^ j) for i in range(info.parts)]
+    received = tuple(lax.ppermute(x, info.axis, perm) for x in operands)
+    merged = lax.sort(
+        tuple(
+            jnp.concatenate(
+                [jnp.where(is_lower, a, b), jnp.where(is_lower, b, a)]
+            )
+            for a, b in zip(operands, received)
+        ),
+        num_keys=num_keys,
+    )
+    start = jnp.where(keep_low, 0, m)
+    return tuple(lax.dynamic_slice_in_dim(x, start, m) for x in merged)
+
+
+def bitonic_sort_sharded(
+    info: ShardInfo,
+    operands: Sequence[jax.Array],
+    num_keys: int = 1,
+) -> tuple[jax.Array, ...]:
+    """Globally sort sharded arrays lexicographically by the first
+    ``num_keys`` operands; remaining operands are payloads carried along.
+
+    Returns shards of the globally sorted sequence (device d holds global
+    positions [d*m, (d+1)*m)) — deterministic sizes, no capacity bounds.
+    """
+    P = info.parts
+    if P & (P - 1):
+        raise ValueError(f"bitonic engine needs power-of-two parts, got {P}")
+    operands = lax.sort(tuple(operands), num_keys=num_keys)
+    me = _me(info)
+    k = 2
+    while k <= P:
+        j = k // 2
+        while j >= 1:
+            partner = me ^ j
+            ascending = (me & k) == 0
+            is_lower = me < partner
+            keep_low = is_lower == ascending
+            operands = _merge_split(
+                info, operands, num_keys, j, keep_low, is_lower
+            )
+            j //= 2
+        k *= 2
+    return operands
+
+
+def scatter_to_index_bitonic(
+    info: ShardInfo, gidx: jax.Array, values: tuple[jax.Array, ...]
+) -> tuple[jax.Array, ...]:
+    """Route (gidx, values) so device d ends up with values for global
+    indices [d*m, (d+1)*m) in order.  ``gidx`` must be a permutation of
+    0..n-1, hence sorting by it is a deterministic all-to-all."""
+    sorted_ops = bitonic_sort_sharded(info, (gidx, *values), num_keys=1)
+    return sorted_ops[1:]
+
+
+# ---------------------------------------------------------------------------
+# engine 2: sample sort (paper-faithful range shuffle)
+# ---------------------------------------------------------------------------
+
+def _lex_less(a: tuple, b: tuple):
+    """Elementwise lexicographic a < b over parallel key arrays."""
+    lt = jnp.zeros(jnp.broadcast_shapes(a[0].shape, b[0].shape), dtype=bool)
+    eq = jnp.ones_like(lt)
+    for x, y in zip(a, b):
+        lt = lt | (eq & (x < y))
+        eq = eq & (x == y)
+    return lt
+
+
+def _lex_searchsorted(sorted_keys: tuple, queries: tuple) -> jax.Array:
+    """searchsorted(side='left') for multi-key arrays: position of the first
+    sorted element not less than the query.  Binary search, vmapped over
+    queries."""
+    m = sorted_keys[0].shape[0]
+    steps = max(1, (m - 1).bit_length())
+
+    def one(q):
+        # derive the carry from varying data so shard_map's varying-manual-
+        # axes check accepts the fori_loop (constants would be unvarying)
+        zero = (q[0] * 0).astype(jnp.int32)
+        lo = zero
+        hi = zero + m
+
+        def body(_, state):
+            lo, hi = state
+            mid = (lo + hi) // 2
+            key_mid = tuple(k[jnp.minimum(mid, m - 1)] for k in sorted_keys)
+            # freeze once converged: extra fori iterations after lo == hi
+            # must not move the bounds (they once pushed lo past m, which
+            # made the capacity clip send one element twice — caught by the
+            # non-power-of-two device-count test)
+            active = lo < hi
+            go_right = _lex_less(key_mid, q)
+            new_lo = jnp.where(active & go_right, mid + 1, lo)
+            new_hi = jnp.where(active & ~go_right, mid, hi)
+            return new_lo, new_hi
+
+        lo, hi = lax.fori_loop(0, steps + 1, body, (lo, hi))
+        return lo
+
+    return jax.vmap(one)(queries)
+
+
+class SampleSortResult(NamedTuple):
+    operands: tuple[jax.Array, ...]  # local slots, valid entries sorted first
+    n_valid: jax.Array               # scalar: valid slots on this device
+    overflow: jax.Array              # scalar bool: capacity exceeded anywhere
+
+
+def samplesort_sharded(
+    info: ShardInfo,
+    operands: Sequence[jax.Array],
+    num_keys: int = 1,
+    capacity_factor: float = 2.0,
+) -> SampleSortResult:
+    """Paper's range-partitioned sort: sample splitters, range-shuffle via
+    capacity-bounded all_to_all, sort locally.
+
+    The global order is: all valid elements of device 0, then device 1, ...
+    (within a device, valid slots are sorted and padded slots follow).
+    Capacity per (src, dst) bucket is ``ceil(capacity_factor * m / P)``;
+    overflow sets the flag (driver retries with larger factor — the explicit
+    version of Spark's skew handling).
+    """
+    P, m = info.parts, info.part_size
+    operands = tuple(operands)
+    keys = operands[:num_keys]
+
+    # 1. local sort
+    ops = lax.sort(operands, num_keys=num_keys)
+    keys_s = ops[:num_keys]
+
+    # 2. regular sampling: P-1 local samples -> all_gather -> global splitters
+    sample_pos = ((jnp.arange(1, P, dtype=jnp.int32)) * m) // P
+    local_samples = tuple(k[sample_pos] for k in keys_s)
+    gathered = tuple(
+        lax.all_gather(s, info.axis).reshape(-1) for s in local_samples
+    )  # (P*(P-1),)
+    gsorted = lax.sort(gathered, num_keys=num_keys)
+    # P-1 splitters at regular positions
+    spl_pos = (jnp.arange(1, P, dtype=jnp.int32) * (P * (P - 1))) // P
+    splitters = tuple(g[spl_pos] for g in gsorted)
+
+    # 3. bucket boundaries in the local sorted run (binary search per splitter)
+    bounds = _lex_searchsorted(keys_s, splitters)          # (P-1,)
+    starts = jnp.concatenate([jnp.zeros(1, jnp.int32), bounds])
+    ends = jnp.concatenate([bounds, jnp.full((1,), m, jnp.int32)])
+    counts = ends - starts                                  # (P,) per-dst
+
+    cap = max(1, int(-(-capacity_factor * m // P)))
+    overflow = jnp.any(counts > cap)
+
+    # 4. build padded send buffers (P, cap) and shuffle
+    slot = jnp.arange(cap, dtype=jnp.int32)
+    take = starts[:, None] + slot[None, :]                  # (P, cap)
+    valid_send = slot[None, :] < jnp.minimum(counts, cap)[:, None]
+    take = jnp.clip(take, 0, m - 1)
+
+    def exchange(buf):  # buf: (P, cap, ...) send blocks, block d -> device d
+        return lax.all_to_all(
+            buf.reshape(P * cap, *buf.shape[2:]), info.axis,
+            split_axis=0, concat_axis=0, tiled=True,
+        ).reshape(P, cap, *buf.shape[2:])
+
+    def shuffle(x, pad):  # x: (m, ...) local sorted operand
+        return exchange(jnp.where(valid_send, x[take], pad))
+
+    recv = tuple(
+        shuffle(x, INT_PAD if i < num_keys else 0)
+        for i, x in enumerate(ops)
+    )
+    recv_valid = exchange(valid_send.astype(jnp.int32)).astype(bool)
+
+    # 5. local sort of received slots; pads (INT_PAD keys) go to the end
+    flat = tuple(r.reshape(P * cap, *r.shape[2:]) for r in recv)
+    vmask = recv_valid.reshape(P * cap)
+    # force invalid slots to INT_PAD on ALL keys so they sort last together
+    flat = tuple(
+        jnp.where(vmask, x, INT_PAD) if i < num_keys else x
+        for i, x in enumerate(flat)
+    )
+    final = lax.sort((*flat, vmask.astype(jnp.int32)), num_keys=num_keys)
+    n_valid = jnp.sum(vmask.astype(jnp.int32))
+    return SampleSortResult(final[:-1], n_valid, lax.pmax(overflow, info.axis))
+
+
+def scatter_to_index_samplesort(
+    info: ShardInfo,
+    gidx: jax.Array,
+    values: tuple[jax.Array, ...],
+    valid: jax.Array,
+    capacity_factor: float = 2.0,
+) -> tuple[tuple[jax.Array, ...], jax.Array]:
+    """Route (gidx, *values) to the owner shard of each global index via a
+    capacity-bounded all_to_all (owner = gidx // m).  Returns index-ordered
+    local arrays + overflow flag.  Invalid slots (padding) are dropped."""
+    P, m = info.parts, info.part_size
+    slots = gidx.shape[0]
+    dest = jnp.where(valid, gidx // m, P)  # P == "nowhere"
+
+    # stable bucket slot: position among same-destination elements
+    order = jnp.argsort(dest, stable=True)
+    dest_s = dest[order]
+    first = _lex_searchsorted((dest_s,), (dest_s,))
+    slot_s = jnp.arange(slots, dtype=jnp.int32) - first
+    cap = max(1, int(-(-capacity_factor * m // P)))
+    overflow = jnp.any((dest_s < P) & (slot_s >= cap))
+
+    def build(x):
+        xs = x[order]
+        buf = jnp.full((P, cap), -1, dtype=x.dtype)
+        ok = (dest_s < P) & (slot_s < cap)
+        row = jnp.where(ok, dest_s, P)  # row P is out of bounds -> dropped
+        return buf.at[row, jnp.clip(slot_s, 0, cap - 1)].set(xs, mode="drop")
+
+    def shuffle(buf):
+        return lax.all_to_all(
+            buf.reshape(P * cap), info.axis, split_axis=0, concat_axis=0,
+            tiled=True,
+        ).reshape(P, cap)
+
+    gidx_r = shuffle(build(gidx)).reshape(-1)
+    vals_r = tuple(shuffle(build(v)).reshape(-1) for v in values)
+    ok = gidx_r >= 0
+    local = jnp.where(ok, gidx_r % m, m)  # m is out of bounds -> dropped
+    outs = tuple(
+        jnp.zeros((m,), dtype=v.dtype).at[local].set(v, mode="drop")
+        for v in vals_r
+    )
+    return outs, lax.pmax(overflow, info.axis)

@@ -1,0 +1,246 @@
+"""Distributed prefix-doubling suffix array + BWT (the paper's contribution).
+
+The Spark pipeline of §2.2 mapped onto a TPU mesh axis (DESIGN.md §2):
+
+    Init       histogram via psum + exclusive cumsum (Occ), local rank lookup
+    Shift      ``shift_sharded`` (two static ppermutes instead of a keyed join)
+    Pair+Sort  distributed sort of (rank, rank[i+h]) with index payload
+               — engine 'bitonic' (deterministic) or 'samplesort' (the
+               paper's range shuffle)
+    Re-rank    boundary halo + local prefix-max + distributed exclusive max
+    Scatter    route new ranks back to index order (sort-by-permutation or
+               capacity-bounded all_to_all)
+    Iterate    h <- 2h, unrolled (static ppermute perms), each round guarded
+               by ``lax.cond`` on the all-distinct flag so converged inputs
+               skip the collective work.
+
+Everything here runs INSIDE ``shard_map``; ``build_isa_sharded`` /
+``build_bwt_sharded`` are the jit-able host-level entry points.  The
+doubling state (rank, done) is exposed so the driver can checkpoint the
+loop at any round boundary (fault tolerance — DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .dist_sort import (
+    ShardInfo,
+    bitonic_sort_sharded,
+    exclusive_max_sharded,
+    exclusive_scan_sharded,
+    samplesort_sharded,
+    scatter_to_index_bitonic,
+    scatter_to_index_samplesort,
+    shift_sharded,
+)
+from .suffix_array import OVERFLOW_RANK
+
+BITONIC = "bitonic"
+SAMPLESORT = "samplesort"
+
+
+class DistSAConfig(NamedTuple):
+    axis: str = "parts"
+    engine: str = BITONIC
+    capacity_factor: float = 2.0   # samplesort bucket slack (Spark skew knob)
+    rounds: int | None = None      # default ceil(log2 n)
+
+
+def _gidx(info: ShardInfo) -> jax.Array:
+    return lax.axis_index(info.axis) * info.part_size + jnp.arange(
+        info.part_size, dtype=jnp.int32
+    )
+
+
+def dist_initial_ranks(info: ShardInfo, s_local: jax.Array, sigma: int) -> jax.Array:
+    """Paper's Init: global char histogram (map/reduce == psum of local
+    bincounts), exclusive cumsum = Occ, local lookup."""
+    counts = lax.psum(jnp.bincount(s_local, length=sigma), info.axis)
+    occ = jnp.cumsum(counts) - counts
+    return occ[s_local].astype(jnp.int32)
+
+
+def dist_rerank(
+    info: ShardInfo,
+    r1s: jax.Array,
+    r2s: jax.Array,
+    n_valid: jax.Array,
+):
+    """Paper's Re-Ranking on the globally sorted pair sequence.
+
+    Valid slots are a prefix of each local shard (engines guarantee this);
+    global position of local valid slot p = (# valid on earlier devices) + p.
+    Returns (ranks_for_valid_slots, all_distinct).
+    """
+    slots = r1s.shape[0]
+    pos = jnp.arange(slots, dtype=jnp.int32)
+    valid = pos < n_valid
+    offset = exclusive_scan_sharded(info, n_valid)
+    gpos = offset + pos
+
+    # previous device's last valid pair (halo for the boundary comparison)
+    has_any = n_valid > 0
+    last = jnp.maximum(n_valid - 1, 0)
+    lastk = jnp.stack([r1s[last], r2s[last]])
+    g_last = lax.all_gather(lastk, info.axis)          # (P, 2)
+    g_has = lax.all_gather(has_any, info.axis)         # (P,)
+    me = lax.axis_index(info.axis)
+    jidx = jnp.arange(info.parts)
+    prev_mask = (jidx < me) & g_has
+    prev_exists = jnp.any(prev_mask)
+    prev_j = jnp.argmax(jnp.where(prev_mask, jidx, -1))
+    prev_k = g_last[prev_j]                            # (2,)
+
+    prev1 = jnp.concatenate([prev_k[:1], r1s[:-1]])
+    prev2 = jnp.concatenate([prev_k[1:], r2s[:-1]])
+    neq = (r1s != prev1) | (r2s != prev2)
+    # first global element has no predecessor -> always a group head
+    neq = neq.at[0].set(jnp.where(prev_exists, neq[0], True))
+
+    heads = jnp.where(valid & neq, gpos, -1)
+    local_scan = lax.associative_scan(jnp.maximum, heads)
+    carry = exclusive_max_sharded(info, local_scan[-1], identity=-1)
+    ranks = jnp.maximum(local_scan, carry)
+
+    n = info.n
+    distinct = lax.psum(jnp.sum((valid & neq).astype(jnp.int32)), info.axis)
+    return ranks.astype(jnp.int32), distinct == n
+
+
+def _doubling_round(info: ShardInfo, cfg: DistSAConfig, h: int, rank, gidx):
+    """One prefix-doubling round; returns (new_rank, all_distinct)."""
+    r2 = shift_sharded(info, rank, h, OVERFLOW_RANK)
+
+    if cfg.engine == BITONIC:
+        r1s, r2s, idxs = bitonic_sort_sharded(info, (rank, r2, gidx), num_keys=2)
+        n_valid = jnp.int32(info.part_size)
+        new_sorted, done = dist_rerank(info, r1s, r2s, n_valid)
+        (new_rank,) = scatter_to_index_bitonic(info, idxs, (new_sorted,))
+        return new_rank, done
+
+    res = samplesort_sharded(
+        info, (rank, r2, gidx), num_keys=2, capacity_factor=cfg.capacity_factor
+    )
+    r1s, r2s, idxs = res.operands
+    new_sorted, done = dist_rerank(info, r1s, r2s, res.n_valid)
+    pos = jnp.arange(r1s.shape[0], dtype=jnp.int32)
+    (new_rank,), overflow2 = scatter_to_index_samplesort(
+        info, idxs, (new_sorted,), valid=pos < res.n_valid,
+        capacity_factor=cfg.capacity_factor,
+    )
+    # overflow poisons the result with a recognizable sentinel; the host
+    # driver checks ``isa_overflowed`` and retries with a larger factor
+    bad = res.overflow | overflow2
+    new_rank = jnp.where(bad, jnp.int32(-2), new_rank)
+    return new_rank, done | bad
+
+
+def num_rounds(n: int) -> int:
+    return max(1, math.ceil(math.log2(max(2, n))))
+
+
+def dist_isa_local(
+    info: ShardInfo, cfg: DistSAConfig, s_local: jax.Array, sigma: int
+) -> jax.Array:
+    """shard_map body: local shard of S -> local shard of the ISA."""
+    rank = dist_initial_ranks(info, s_local, sigma)
+    gidx = _gidx(info)
+    done = jnp.asarray(info.n <= 1)
+    rounds = cfg.rounds if cfg.rounds is not None else num_rounds(info.n)
+    for r in range(rounds):
+        h = 2 ** r
+
+        def do(args):
+            rank, _ = args
+            return _doubling_round(info, cfg, h, rank, gidx)
+
+        rank, done = lax.cond(done, lambda a: a, do, (rank, done))
+    return rank
+
+
+def dist_bwt_local(
+    info: ShardInfo, cfg: DistSAConfig, s_local: jax.Array, isa_local: jax.Array
+):
+    """shard_map body: (S, ISA) -> (SA, BWT, row) local shards.
+
+    The paper's "join": bwt[i] = S[(SA[i]-1) mod n].  Routing steps (all
+    permutations, so the bitonic engine is always exact here):
+      1. SA[isa[i]] = i           (scatter by rank)
+      2. fetch c[i] = S[SA[i]-1]  (scatter query to owner, answer in place)
+      3. scatter answers back by output position
+    """
+    gidx = _gidx(info)
+    n = info.n
+    # 1. SA in index order
+    (sa_local,) = scatter_to_index_bitonic(info, isa_local, (gidx,))
+    # 2. j = (SA-1) mod n; route (j, out_pos) to the owner of j
+    j = jnp.mod(sa_local - 1, n)
+    j_sorted, outpos = bitonic_sort_sharded(info, (j, gidx), num_keys=1)
+    # j is a permutation -> after sorting, local j's are exactly my range
+    chars = s_local[j_sorted - lax.axis_index(info.axis) * info.part_size]
+    # 3. route chars to their output position
+    (bwt_local,) = scatter_to_index_bitonic(info, outpos, (chars,))
+    row = lax.psum(jnp.sum(jnp.where(sa_local == 0, gidx, 0)), info.axis)
+    return sa_local, bwt_local, row.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# host-level entry points (jit + shard_map over a 1-D mesh axis)
+# ---------------------------------------------------------------------------
+
+def isa_overflowed(isa) -> bool:
+    """True when a samplesort round overflowed its capacity bound."""
+    return bool(jnp.any(isa == -2))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sigma", "cfg", "mesh_axis_size", "mesh")
+)
+def _isa_jit(s, sigma, cfg, mesh_axis_size, mesh):
+    info = ShardInfo(cfg.axis, mesh_axis_size, s.shape[0] // mesh_axis_size)
+    fn = functools.partial(dist_isa_local, info, cfg, sigma=sigma)
+    return jax.shard_map(
+        fn, mesh=mesh, in_specs=P(cfg.axis), out_specs=P(cfg.axis)
+    )(s)
+
+
+def build_isa_sharded(s, mesh: Mesh, cfg: DistSAConfig = DistSAConfig(), *, sigma: int):
+    """Distributed ISA of a sentinel-terminated token string.
+
+    ``len(s)`` must be divisible by the mesh axis size (pad upstream with
+    trailing sentinels is NOT valid — the sentinel must be unique; instead
+    the data pipeline pads with distinct high tokens, see data/corpus.py).
+    """
+    axis_size = mesh.shape[cfg.axis]
+    if s.shape[0] % axis_size:
+        raise ValueError(f"n={s.shape[0]} not divisible by axis size {axis_size}")
+    s = jax.device_put(s, NamedSharding(mesh, P(cfg.axis)))
+    return _isa_jit(s, sigma, cfg, axis_size, mesh)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "mesh_axis_size", "mesh"))
+def _bwt_jit(s, isa, cfg, mesh_axis_size, mesh):
+    info = ShardInfo(cfg.axis, mesh_axis_size, s.shape[0] // mesh_axis_size)
+    fn = functools.partial(dist_bwt_local, info, cfg)
+    return jax.shard_map(
+        fn,
+        mesh=mesh,
+        in_specs=(P(cfg.axis), P(cfg.axis)),
+        out_specs=(P(cfg.axis), P(cfg.axis), P()),
+    )(s, isa)
+
+
+def build_bwt_sharded(s, mesh: Mesh, cfg: DistSAConfig = DistSAConfig(), *, sigma: int):
+    """Distributed (SA, BWT, row) of a sentinel-terminated token string."""
+    isa = build_isa_sharded(s, mesh, cfg, sigma=sigma)
+    axis_size = mesh.shape[cfg.axis]
+    s = jax.device_put(s, NamedSharding(mesh, P(cfg.axis)))
+    return _bwt_jit(s, isa, cfg, axis_size, mesh)

@@ -1,0 +1,138 @@
+"""FM-index over a BWT: C array, sampled Occ checkpoints, backward search.
+
+This is the "full-text index that enables fast querying" the paper builds
+toward (§1): exact pattern matching in O(m) rank queries per pattern,
+independent of the indexed-text length.
+
+Layout (all dense arrays, shard- and jit-friendly):
+
+* ``bwt``          int32[n]      last column
+* ``C``            int32[sigma]  # chars strictly smaller (exclusive cumsum)
+* ``occ_samples``  int32[n/r + 1, sigma]  checkpointed exclusive Occ counts
+* rank(c, p) = occ_samples[p // r, c] + count of c in bwt[(p//r)*r : p]
+
+``sample_rate`` trades memory (n*sigma/r ints) for per-query scan length r —
+the classic FM-index trade-off the paper cites ([4] Ferragina-Manzini).
+The in-block count is the hot spot; ``kernels/rank_select`` provides the
+Pallas TPU version, this module is the jnp reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+PAD = -1  # query padding token
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class FMIndex:
+    bwt: jax.Array          # int32[n_blocks * r], PAD beyond position n
+    row: jax.Array          # scalar int32: row of the original string
+    c_array: jax.Array      # int32[sigma]
+    occ_samples: jax.Array  # int32[n_blocks + 1, sigma]
+    sample_rate: int        # static (pytree aux data)
+    sigma: int              # static (pytree aux data)
+    length: int             # static: true text length n
+
+    @property
+    def n(self) -> int:
+        return self.length
+
+    def tree_flatten(self):
+        return ((self.bwt, self.row, self.c_array, self.occ_samples),
+                (self.sample_rate, self.sigma, self.length))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def build_fm_index(
+    bwt_arr: jax.Array, row: jax.Array, sigma: int, sample_rate: int = 64
+) -> FMIndex:
+    n = bwt_arr.shape[0]
+    counts = jnp.bincount(bwt_arr, length=sigma)
+    c_array = (jnp.cumsum(counts) - counts).astype(jnp.int32)
+
+    n_blocks = -(-n // sample_rate)  # ceil
+    pad = n_blocks * sample_rate - n
+    padded = jnp.pad(bwt_arr, (0, pad), constant_values=PAD)
+    onehot = (padded[:, None] == jnp.arange(sigma)[None, :]).astype(jnp.int32)
+    block_counts = onehot.reshape(n_blocks, sample_rate, sigma).sum(axis=1)
+    occ_samples = jnp.concatenate(
+        [jnp.zeros((1, sigma), jnp.int32), jnp.cumsum(block_counts, axis=0)]
+    )  # exclusive checkpoints: occ_samples[k] counts bwt[: k*r]
+    # the padded copy keeps every in-block dynamic_slice in bounds
+    return FMIndex(padded, jnp.asarray(row, jnp.int32), c_array, occ_samples,
+                   sample_rate, sigma, n)
+
+
+def occ(index: FMIndex, c: jax.Array, p: jax.Array) -> jax.Array:
+    """# occurrences of character ``c`` in ``bwt[:p]`` (exclusive rank)."""
+    r = index.sample_rate
+    block = p // r
+    base = index.occ_samples[block, c]
+    start = block * r
+    # count c in bwt[start : p] — fixed-width window + position mask
+    window = lax.dynamic_slice(index.bwt, (start,), (r,))
+    inblock = jnp.sum((window == c) & (start + jnp.arange(r) < p))
+    return base + inblock.astype(jnp.int32)
+
+
+def backward_search(index: FMIndex, pattern: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """(sp, ep) suffix-array interval of ``pattern`` (PAD-padded on the right).
+
+    Count of exact occurrences is ``ep - sp``.
+    """
+    n = index.n
+
+    def step(state, c):
+        sp, ep = state
+        in_alphabet = (c >= 1) & (c < index.sigma)
+        valid = in_alphabet & (ep > sp)
+        c_safe = jnp.where(in_alphabet, c, 0)
+        nsp = index.c_array[c_safe] + occ(index, c_safe, sp)
+        nep = index.c_array[c_safe] + occ(index, c_safe, ep)
+        # PAD steps are no-ops; an already-empty interval stays empty;
+        # an out-of-alphabet symbol (unknown to the index) empties it
+        sp = jnp.where(valid, nsp, sp)
+        ep = jnp.where(valid, nep, jnp.where((c != PAD) & ~in_alphabet, sp, ep))
+        return (sp, ep), None
+
+    # process right-to-left; PADs sit on the right so they come first and
+    # are skipped by ``valid``
+    (sp, ep), _ = lax.scan(step, (jnp.int32(0), jnp.int32(n)), pattern[::-1])
+    return sp, ep
+
+
+@jax.jit
+def count(index: FMIndex, patterns: jax.Array) -> jax.Array:
+    """Batched exact-match counts: patterns int32[B, m] PAD-padded."""
+    sp, ep = jax.vmap(lambda p: backward_search(index, p))(patterns)
+    return jnp.maximum(ep - sp, 0)
+
+
+def locate_naive(index: FMIndex, sa: jax.Array, pattern: jax.Array) -> jax.Array:
+    """Occurrence positions via a full SA (test oracle — production locate
+    would use an SA sample, out of the paper's scope)."""
+    sp, ep = backward_search(index, pattern)
+    return jnp.sort(jnp.where(
+        (jnp.arange(index.n) >= sp) & (jnp.arange(index.n) < ep), sa, index.n
+    ))
+
+
+def count_naive(text, pattern) -> int:
+    """Overlapping substring-count numpy oracle."""
+    import numpy as np
+
+    text, pattern = np.asarray(text), np.asarray(pattern)
+    m = len(pattern)
+    if m == 0 or m > len(text):
+        return 0
+    windows = np.lib.stride_tricks.sliding_window_view(text, m)
+    return int((windows == pattern).all(axis=1).sum())

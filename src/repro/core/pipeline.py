@@ -1,0 +1,114 @@
+"""End-to-end indexing pipeline: tokens -> (SA, BWT, FM-index).
+
+Public API used by examples, benchmarks, and the data-pipeline dedup stage.
+Dispatches between the single-device reference path and the distributed
+shard_map path (any mesh with a ``parts`` axis).
+
+Padding note: SPMD needs n divisible by parts*sample_rate.  We append the
+unique smallest sentinel first (required by the BWT), then pad with a
+dedicated token HIGHER than every real token.  Pad suffixes consist only of
+pad tokens, so they can never match a query over the real alphabet, and real
+char ranks are unaffected — counting semantics are exact (asserted by tests).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from . import alphabet as al
+from .bwt import bwt_from_sa
+from .dist_fm import DistFMIndex, build_dist_fm_index, dist_count
+from .dist_suffix_array import (
+    DistSAConfig,
+    _bwt_jit,
+    build_isa_sharded,
+    isa_overflowed,
+)
+from .fm_index import FMIndex, build_fm_index, count as fm_count
+from .suffix_array import suffix_array
+
+
+@dataclasses.dataclass
+class SequenceIndex:
+    """A built full-text index plus query methods."""
+
+    fm: FMIndex | DistFMIndex
+    sa: jax.Array | None
+    bwt: jax.Array
+    row: jax.Array
+    sigma: int
+    length: int          # padded length
+    text_length: int     # true length incl. sentinel
+    mesh: Mesh | None = None
+
+    def count(self, patterns) -> jax.Array:
+        """Exact-match counts for int32[B, L] PAD-padded patterns."""
+        patterns = jnp.asarray(patterns, jnp.int32)
+        if self.mesh is None:
+            return fm_count(self.fm, patterns)
+        return dist_count(self.fm, patterns, self.mesh)
+
+
+def prepare_tokens(tokens: np.ndarray, multiple: int) -> tuple[np.ndarray, int]:
+    """Sentinel-terminate and pad to a multiple; returns (padded, sigma)."""
+    s = al.append_sentinel(np.asarray(tokens, dtype=np.int32))
+    sigma = al.sigma_of(s)
+    pad = (-len(s)) % multiple
+    if pad:
+        s = np.concatenate([s, np.full(pad, sigma, np.int32)])
+        sigma += 1
+    return s, sigma
+
+
+def build_index(
+    tokens: np.ndarray,
+    mesh: Mesh | None = None,
+    *,
+    sample_rate: int = 64,
+    sa_config: DistSAConfig = DistSAConfig(),
+    max_retries: int = 3,
+) -> SequenceIndex:
+    """Build a (distributed) BWT/FM index over raw tokens (no sentinel).
+
+    With a mesh, retries samplesort capacity overflows with doubled factor —
+    the explicit analogue of Spark skew recovery (DESIGN.md §4).
+    """
+    tokens = np.asarray(tokens, dtype=np.int32)
+    text_length = len(tokens) + 1
+
+    if mesh is None:
+        s, sigma = prepare_tokens(tokens, sample_rate)
+        s_dev = jnp.asarray(s)
+        sa = suffix_array(s_dev, sigma)
+        bwt_arr, row = bwt_from_sa(s_dev, sa)
+        fm = build_fm_index(bwt_arr, row, sigma, sample_rate)
+        return SequenceIndex(fm, sa, bwt_arr, row, sigma, len(s), text_length)
+
+    parts = mesh.shape[sa_config.axis]
+    s, sigma = prepare_tokens(tokens, parts * sample_rate)
+    s_dev = jnp.asarray(s)
+    cfg = sa_config
+    for attempt in range(max_retries):
+        isa = build_isa_sharded(s_dev, mesh, cfg, sigma=sigma)
+        if not isa_overflowed(isa):
+            break
+        cfg = cfg._replace(capacity_factor=cfg.capacity_factor * 2)
+    else:
+        raise RuntimeError(
+            f"samplesort capacity overflow after {max_retries} retries "
+            f"(factor {cfg.capacity_factor})"
+        )
+    from jax.sharding import NamedSharding, PartitionSpec
+    s_sharded = jax.device_put(
+        s_dev, NamedSharding(mesh, PartitionSpec(cfg.axis))
+    )
+    sa, bwt_arr, row = _bwt_jit(s_sharded, isa, cfg, parts, mesh)
+    fm = build_dist_fm_index(bwt_arr, row, mesh, sigma=sigma,
+                             sample_rate=sample_rate)
+    return SequenceIndex(fm, sa, bwt_arr, row, sigma, len(s), text_length,
+                         mesh=mesh)

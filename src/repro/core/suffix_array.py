@@ -1,0 +1,117 @@
+"""Single-device suffix-array construction by prefix doubling.
+
+This is the reference implementation of the paper's algorithm (§2.2):
+
+    Init      rank[i] = Occ(S(i))          (count of strictly-smaller chars)
+    Pair      pair rank[i] with rank[i+h]  (overflow pairs with a value that
+                                            compares below every real rank)
+    Re-rank   sort pairs, new rank = position of the head of the equal-group
+    Iterate   h <- 2h, until all ranks distinct (<= ceil(log2 n) rounds)
+
+Everything is a fixed-shape jittable program: the doubling loop is a
+``lax.while_loop`` with an early-exit condition on rank distinctness, so the
+compiled artifact is shape-stable while still stopping after the data-
+dependent number of rounds the paper describes.
+
+The distributed version (``dist_suffix_array.py``) reuses ``rerank_from_sorted``
+semantics shard-by-shard; this module doubles as its oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+OVERFLOW_RANK = -1  # shorter suffix sorts first; real ranks are >= 0
+
+
+def initial_ranks(s: jax.Array, sigma: int) -> jax.Array:
+    """Paper's Init step: rank[i] = Occ(S(i)) via histogram + exclusive
+    cumulative sum (the map/reduce + local scan of §2.2)."""
+    counts = jnp.bincount(s, length=sigma)
+    occ = jnp.cumsum(counts) - counts  # exclusive prefix sum == Occ(c)
+    return occ[s].astype(jnp.int32)
+
+
+def rerank_from_sorted(
+    r1_sorted: jax.Array, r2_sorted: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Paper's Re-rank step, applied to lexicographically sorted pairs.
+
+    new_rank[i] = i                 if pair[i] != pair[i-1]
+                = new_rank[i-1]     otherwise
+    which equals a prefix-max over ``i * [pair changed at i]``.
+
+    Returns ``(new_ranks, all_distinct)``; ``all_distinct`` is true when every
+    sorted pair differs from its predecessor (termination condition).
+    """
+    n = r1_sorted.shape[0]
+    neq = (r1_sorted[1:] != r1_sorted[:-1]) | (r2_sorted[1:] != r2_sorted[:-1])
+    flags = jnp.concatenate([jnp.ones((1,), dtype=bool), neq])
+    heads = jnp.where(flags, jnp.arange(n, dtype=jnp.int32), 0)
+    return lax.associative_scan(jnp.maximum, heads), jnp.all(flags)
+
+
+def shifted_ranks(rank: jax.Array, h: jax.Array) -> jax.Array:
+    """rank2[i] = rank[i+h] for i+h < n else OVERFLOW_RANK (paper's Shifting
+    and Pairing, expressed as a roll + mask instead of a keyed join)."""
+    n = rank.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    rolled = jnp.roll(rank, -h)
+    return jnp.where(idx + h < n, rolled, OVERFLOW_RANK).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma",))
+def isa_prefix_doubling(s: jax.Array, sigma: int) -> jax.Array:
+    """Compute the inverse suffix array (ISA: suffix index -> rank) of ``s``.
+
+    ``s`` must terminate with the unique smallest sentinel (token 0); see
+    ``alphabet.append_sentinel``.
+    """
+    n = s.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    rank0 = initial_ranks(s, sigma)
+
+    def cond(state):
+        _, h, done = state
+        return (h < n) & ~done
+
+    def body(state):
+        rank, h, _ = state
+        r2 = shifted_ranks(rank, h)
+        r1s, r2s, perm = lax.sort((rank, r2, idx), num_keys=2)
+        new_sorted, done = rerank_from_sorted(r1s, r2s)
+        new_rank = jnp.zeros_like(rank).at[perm].set(new_sorted)
+        return new_rank, h * 2, done
+
+    # the sentinel makes n == 1 trivially done; otherwise at least one round
+    rank, _, _ = lax.while_loop(
+        cond, body, (rank0, jnp.int32(1), jnp.asarray(n == 1))
+    )
+    return rank
+
+
+def sa_from_isa(isa: jax.Array) -> jax.Array:
+    """SA[rank] = i  (inversion of a permutation)."""
+    n = isa.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    return jnp.zeros_like(isa).at[isa].set(idx)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma",))
+def suffix_array(s: jax.Array, sigma: int) -> jax.Array:
+    """Suffix array of a sentinel-terminated token string."""
+    return sa_from_isa(isa_prefix_doubling(s, sigma))
+
+
+def suffix_array_naive(s) -> "np.ndarray":  # noqa: F821 - numpy oracle
+    """O(n^2 log n) numpy oracle for tests."""
+    import numpy as np
+
+    s = np.asarray(s)
+    n = len(s)
+    suffixes = sorted(range(n), key=lambda i: s[i:].tolist())
+    return np.array(suffixes, dtype=np.int32)

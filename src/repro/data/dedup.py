@@ -1,0 +1,64 @@
+"""BWT/FM-index powered data hygiene for LM training.
+
+This is where the paper's contribution becomes a first-class feature of the
+training framework (DESIGN.md §3): the distributed index built by
+``core.pipeline`` answers exact-substring queries over the whole corpus, so
+the data pipeline can
+  * drop exact duplicate windows (train-time dedup), and
+  * screen held-out/eval sequences that leak into the corpus (contamination).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.fm_index import PAD
+from ..core.pipeline import SequenceIndex, build_index
+
+
+def build_corpus_index(tokens: np.ndarray, mesh=None, **kw) -> SequenceIndex:
+    return build_index(tokens, mesh, **kw)
+
+
+def duplicate_window_mask(
+    index: SequenceIndex, tokens: np.ndarray, window: int,
+    stride: int | None = None, threshold: int = 2, batch: int = 256,
+) -> np.ndarray:
+    """mask[i] = True when the window starting at i occurs >= ``threshold``
+    times in the indexed corpus (an exact duplicate somewhere else)."""
+    stride = stride or window
+    n = len(tokens)
+    starts = np.arange(0, n - window, stride)
+    mask = np.zeros(n, dtype=bool)
+    for lo in range(0, len(starts), batch):
+        chunk = starts[lo : lo + batch]
+        pats = np.stack([tokens[s : s + window] for s in chunk]).astype(np.int32)
+        counts = np.asarray(index.count(pats))
+        for s, c in zip(chunk, counts):
+            if c >= threshold:
+                mask[s : s + stride] = True
+    return mask
+
+
+def contamination_report(
+    index: SequenceIndex, eval_sequences: list[np.ndarray], probe_len: int = 32,
+) -> dict:
+    """For each eval sequence, count corpus hits of its probes."""
+    probes = []
+    owners = []
+    for i, seq in enumerate(eval_sequences):
+        for s in range(0, max(1, len(seq) - probe_len + 1), probe_len):
+            probes.append(seq[s : s + probe_len])
+            owners.append(i)
+    L = max(len(p) for p in probes)
+    pats = np.full((len(probes), L), PAD, np.int32)
+    for j, p in enumerate(probes):
+        pats[j, : len(p)] = p
+    counts = np.asarray(index.count(pats))
+    hits = {}
+    for i, c in zip(owners, counts):
+        hits[i] = hits.get(i, 0) + int(c > 0)
+    return {
+        "contaminated": sorted(k for k, v in hits.items() if v > 0),
+        "probe_hits": hits,
+    }

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the indexing hot spots (DESIGN.md §2).
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), a jit wrapper in
+ops.py, and a pure-jnp oracle in ref.py; tests sweep shapes/dtypes and
+assert exact agreement in interpret mode.
+"""
+
+from .ops import char_histogram, radix_hist, rank_select, rerank_scan  # noqa: F401

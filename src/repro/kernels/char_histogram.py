@@ -1,0 +1,48 @@
+"""Pallas TPU kernel: blocked character histogram (paper's Init map/reduce).
+
+Counts token occurrences over VMEM tiles of shape (rows, 128) and
+accumulates into a single int32[sigma] output that every grid step maps to
+(revisited blocks persist on TPU, so the accumulation is race-free on the
+sequential grid).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, out_ref, *, sigma: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...].reshape(-1)                                # (rows*128,)
+    onehot = (x[:, None] == jnp.arange(sigma, dtype=x.dtype)[None, :])
+    out_ref[...] += onehot.sum(axis=0).astype(jnp.int32)
+
+
+def char_histogram_pallas(
+    tokens, sigma: int, *, block_rows: int = 8, interpret: bool = False
+):
+    """tokens int32[n] with n % (block_rows*128) == 0 -> int32[sigma]."""
+    n = tokens.shape[0]
+    lanes = 128
+    rows = n // lanes
+    if n % (block_rows * lanes):
+        raise ValueError(f"n={n} must be a multiple of {block_rows * lanes}")
+    x2d = tokens.reshape(rows, lanes)
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_kernel, sigma=sigma),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((sigma,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((sigma,), jnp.int32),
+        interpret=interpret,
+    )(x2d)

@@ -1,0 +1,74 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Each wrapper auto-selects interpret mode off-TPU (this container is
+CPU-only; TPU is the compile target), pads inputs to kernel granularity,
+and exposes the same signature as the ``ref.py`` oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .char_histogram import char_histogram_pallas
+from .radix_hist import radix_hist_pallas
+from .rank_select import rank_select_pallas
+from .rerank_scan import rerank_scan_pallas
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "block_rows", "interpret"))
+def char_histogram(tokens, sigma: int, *, block_rows: int = 8,
+                   interpret: bool | None = None):
+    """Histogram of int32 tokens (pads with sigma, which lands out of range
+    and is dropped by construction — padded lanes count into a scratch bin)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    unit = block_rows * 128
+    n = tokens.shape[0]
+    pad = (-n) % unit
+    if pad:
+        # pad value sigma falls outside [0, sigma) -> contributes nothing
+        tokens = jnp.pad(tokens, (0, pad), constant_values=sigma)
+    return char_histogram_pallas(
+        tokens, sigma, block_rows=block_rows, interpret=interpret
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def rerank_scan(r1, r2, *, block: int = 512, interpret: bool | None = None):
+    """(ranks, num_groups) for sorted pairs; inputs padded with a strictly
+    larger tail pair so padding forms its own trailing group."""
+    interpret = _interpret_default() if interpret is None else interpret
+    n = r1.shape[0]
+    pad = (-n) % block
+    if pad:
+        big = jnp.iinfo(jnp.int32).max
+        r1 = jnp.pad(r1, (0, pad), constant_values=big)
+        r2 = jnp.pad(r2, (0, pad), constant_values=big)
+    ranks, ngroups = rerank_scan_pallas(r1, r2, block=block, interpret=interpret)
+    if pad:
+        ranks = ranks[:n]
+        ngroups = ngroups - 1  # the padding group
+    return ranks, ngroups[0]
+
+
+@functools.partial(jax.jit, static_argnames=("shift", "block", "interpret"))
+def radix_hist(keys, shift: int, *, block: int = 1024,
+               interpret: bool | None = None):
+    """Per-block digit histograms; n must divide block (callers tile)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return radix_hist_pallas(keys, shift, block=block, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rank_select(bwt_blocks, block_idx, c, cutoff, *, interpret: bool | None = None):
+    """In-block FM rank counts (scalar-prefetch gather kernel)."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return rank_select_pallas(
+        bwt_blocks, block_idx, c, cutoff, interpret=interpret
+    )

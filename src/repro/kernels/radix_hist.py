@@ -1,0 +1,45 @@
+"""Pallas TPU kernel: per-block 8-bit digit histograms.
+
+The counting pass of an LSD radix sort — the local-sort hot loop inside both
+distributed sort engines (DESIGN.md §4).  Each grid step reads one key tile
+from VMEM, extracts the digit at ``shift``, and writes that tile's 256-bin
+histogram row.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(keys_ref, out_ref, *, shift: int):
+    keys = keys_ref[...].reshape(-1).astype(jnp.uint32)
+    digits = (keys >> shift) & 0xFF
+    onehot = digits[:, None] == jnp.arange(256, dtype=jnp.uint32)[None, :]
+    out_ref[...] = onehot.sum(axis=0).astype(jnp.int32)[None, :]
+
+
+def radix_hist_pallas(
+    keys, shift: int, *, block: int = 1024, interpret: bool = False
+):
+    """keys int32[n] (n % block == 0) -> int32[n//block, 256] histograms."""
+    n = keys.shape[0]
+    if n % block:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    nblocks = n // block
+    lanes = 128
+    rows = block // lanes
+    if block % lanes:
+        raise ValueError(f"block={block} must be a multiple of {lanes}")
+    x2d = keys.reshape(nblocks * rows, lanes)
+    return pl.pallas_call(
+        functools.partial(_kernel, shift=shift),
+        grid=(nblocks,),
+        in_specs=[pl.BlockSpec((rows, lanes), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 256), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, 256), jnp.int32),
+        interpret=interpret,
+    )(x2d)

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: FM-index in-block rank queries via scalar prefetch.
+
+The serving hot spot: each backward-search step needs Occ(c, p) for a batch
+of data-dependent positions.  The checkpointed base is a cheap gather; the
+in-block count needs the right BWT tile per query.  On TPU this is the
+canonical scalar-prefetch pattern: the block indices arrive as prefetched
+scalars, and the BlockSpec index_map selects which HBM tile to DMA into
+VMEM for each grid step — a data-dependent gather expressed structurally.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(block_idx_ref, c_ref, cutoff_ref, bwt_ref, out_ref):
+    q = pl.program_id(0)
+    c = c_ref[q]
+    cutoff = cutoff_ref[q]
+    blk = bwt_ref[0, :]
+    pos = jnp.arange(blk.shape[0], dtype=jnp.int32)
+    out_ref[0] = jnp.sum((blk == c) & (pos < cutoff)).astype(jnp.int32)
+
+
+def rank_select_pallas(bwt_blocks, block_idx, c, cutoff, *, interpret=False):
+    """In-block counts for FM rank queries.
+
+    bwt_blocks int32[nblocks, r]; block_idx/c/cutoff int32[B].
+    Returns int32[B]: count of c among the first ``cutoff`` entries of the
+    selected block, one query per grid step.
+    """
+    B = block_idx.shape[0]
+    r = bwt_blocks.shape[1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, r), lambda q, bidx, c, cut: (bidx[q], 0)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda q, bidx, c, cut: (q,)),
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        interpret=interpret,
+    )(block_idx, c, cutoff, bwt_blocks)

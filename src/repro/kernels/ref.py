@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the contract each kernel's
+output is asserted against, on full shape/dtype sweeps — tests/test_kernels).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def char_histogram_ref(tokens: jax.Array, sigma: int) -> jax.Array:
+    """Histogram of token values: int32[sigma]."""
+    return jnp.bincount(tokens.reshape(-1), length=sigma).astype(jnp.int32)
+
+
+def rerank_scan_ref(r1: jax.Array, r2: jax.Array):
+    """Paper's Re-rank on a sorted pair sequence.
+
+    Returns (ranks int32[n], num_groups int32): rank = position of the head
+    of each equal-group; num_groups counts distinct pairs.
+    """
+    n = r1.shape[0]
+    neq = (r1[1:] != r1[:-1]) | (r2[1:] != r2[:-1])
+    flags = jnp.concatenate([jnp.ones((1,), bool), neq])
+    heads = jnp.where(flags, jnp.arange(n, dtype=jnp.int32), -1)
+    ranks = lax.associative_scan(jnp.maximum, heads)
+    return ranks.astype(jnp.int32), jnp.sum(flags).astype(jnp.int32)
+
+
+def radix_hist_ref(keys: jax.Array, shift: int, block: int) -> jax.Array:
+    """Per-block 8-bit digit histograms: int32[n//block, 256]."""
+    digits = (keys.astype(jnp.uint32) >> shift) & 0xFF
+    digits = digits.reshape(-1, block)
+    onehot = digits[..., None] == jnp.arange(256, dtype=jnp.uint32)
+    return onehot.sum(axis=1).astype(jnp.int32)
+
+
+def rank_select_ref(
+    bwt_blocks: jax.Array, block_idx: jax.Array, c: jax.Array, cutoff: jax.Array
+) -> jax.Array:
+    """In-block occurrence counts for FM rank queries.
+
+    bwt_blocks int32[nblocks, r]; for query q: count of ``c[q]`` among the
+    first ``cutoff[q]`` positions of block ``block_idx[q]``.
+    """
+    r = bwt_blocks.shape[1]
+    blocks = bwt_blocks[block_idx]                      # (B, r)
+    pos = jnp.arange(r, dtype=jnp.int32)[None, :]
+    return jnp.sum(
+        (blocks == c[:, None]) & (pos < cutoff[:, None]), axis=1
+    ).astype(jnp.int32)

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: the paper's Re-rank step as a blocked carry scan.
+
+Input: lexicographically sorted rank pairs (r1, r2).  Output: new ranks
+(= global position of each equal-group's head) and the number of distinct
+groups (the prefix-doubling termination counter).
+
+The grid is sequential on TPU, so the cross-block carry — previous block's
+last pair and its running head position — lives in an SMEM scratch that
+persists across grid steps.  Inside a block the prefix-max is a
+``lax.cummax`` over flagged global positions (VPU-friendly).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(r1_ref, r2_ref, ranks_ref, ngroups_ref, carry_ref, *, block: int):
+    step = pl.program_id(0)
+    r1 = r1_ref[...]
+    r2 = r2_ref[...]
+
+    @pl.when(step == 0)
+    def _init():
+        # carry = (prev_r1, prev_r2, running_head_max, num_groups)
+        carry_ref[0] = r1[0] + 1  # != r1[0]: forces a head at position 0
+        carry_ref[1] = r2[0] + 1
+        carry_ref[2] = -1
+        carry_ref[3] = 0
+
+    prev1 = jnp.concatenate([carry_ref[0][None], r1[:-1]])
+    prev2 = jnp.concatenate([carry_ref[1][None], r2[:-1]])
+    flags = (r1 != prev1) | (r2 != prev2)
+
+    gpos = step * block + jnp.arange(block, dtype=jnp.int32)
+    heads = jnp.where(flags, gpos, -1)
+    local = lax.cummax(heads)
+    ranks = jnp.maximum(local, carry_ref[2])
+    ranks_ref[...] = ranks.astype(jnp.int32)
+
+    carry_ref[0] = r1[-1]
+    carry_ref[1] = r2[-1]
+    carry_ref[2] = ranks[-1]
+    carry_ref[3] = carry_ref[3] + jnp.sum(flags.astype(jnp.int32))
+    ngroups_ref[0] = carry_ref[3]
+
+
+def rerank_scan_pallas(r1, r2, *, block: int = 512, interpret: bool = False):
+    """(ranks int32[n], num_groups int32[1]); n % block == 0 required."""
+    n = r1.shape[0]
+    if n % block:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    grid = (n // block,)
+    return pl.pallas_call(
+        functools.partial(_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((4,), jnp.int32)],
+        interpret=interpret,
+    )(r1, r2)

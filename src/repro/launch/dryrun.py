@@ -1,0 +1,410 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes, record memory/cost/roofline analysis.
+
+This is the proof that the distribution config is coherent without real
+hardware (system-prompt deliverable (e)): a sharding mismatch, compile-time
+OOM, or unsupported collective fails the cell.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                  # all cells
+    ... dryrun --arch qwen2p5_3b --shape train_4k --multi-pod both
+    ... dryrun --arch bwt_index                                   # index build
+    ... dryrun --list
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and feed
+EXPERIMENTS.md §Dry-run / §Roofline.
+"""
+
+import argparse     # noqa: E402
+import json         # noqa: E402
+import time         # noqa: E402
+import traceback    # noqa: E402
+
+import jax          # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..configs.base import ARCH_IDS, get_config  # noqa: E402
+from ..models import transformer as tf  # noqa: E402
+from ..sharding import DECODE_RULES, TRAIN_RULES, MeshContext  # noqa: E402
+from ..training.optimizer import AdamWConfig, adamw_update  # noqa: E402
+from . import roofline as rf  # noqa: E402
+from .mesh import make_index_mesh, make_production_mesh  # noqa: E402
+from .specs import (  # noqa: E402
+    SHAPES,
+    batch_specs,
+    cache_specs,
+    opt_state_abstract,
+    param_specs_abstract,
+    shape_skip_reason,
+)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _train_step_fn(cfg, ctx, unroll=1, n_micro=1, remat="full"):
+    """Train step with gradient accumulation over ``n_micro`` microbatches —
+    the standard fit lever for big models on 16GB chips: activation
+    checkpoints and CE temps scale with the microbatch, grads accumulate in
+    one f32 buffer (DESIGN.md §6)."""
+    opt_cfg = AdamWConfig()
+
+    def step(state, batch):
+        params = state["params"]
+
+        def loss_of(p, mb):
+            return tf.loss_fn(p, mb, cfg, ctx, remat_policy=remat,
+                              scan_unroll=unroll)
+
+        if n_micro == 1:
+            loss_val, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            from ..sharding import constrain
+
+            def reshard(x):
+                x = x.reshape(n_micro, x.shape[0] // n_micro, *x.shape[1:])
+                # keep the BATCH dim sharded (not the micro index) so each
+                # scan iteration slices a replicated leading dim — without
+                # this SPMD reshards every microbatch (involuntary remat)
+                axes = (None, "batch") + (None,) * (x.ndim - 2)
+                return constrain(x, ctx, axes)
+
+            micro = jax.tree_util.tree_map(reshard, batch)
+
+            def body(acc, mb):
+                lv, g = jax.value_and_grad(loss_of)(params, mb)
+                g32 = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc[1], g
+                )
+                return (acc[0] + lv, g32), None
+
+            # derive the f32 accumulator FROM the params so SPMD shards it
+            # like them (a bare jnp.zeros would be layout-free and risks
+            # replication — a 13.6 GB/dev temp at qwen scale)
+            zeros = jax.tree_util.tree_map(
+                lambda p: (p * 0).astype(jnp.float32), params
+            )
+            (loss_sum, gsum), _ = jax.lax.scan(
+                body, (jnp.float32(0), zeros), micro,
+                unroll=bool(unroll is True),
+            )
+            loss_val = loss_sum / n_micro
+            grads = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
+
+        params, opt, _ = adamw_update(grads, state["opt"], params, opt_cfg)
+        return {"params": params, "opt": opt}, loss_val
+
+    return step
+
+
+def _prefill_fn(cfg, ctx, unroll=1):
+    def prefill(params, batch):
+        # serving prefill returns only the final position's logits — the
+        # full (B, 32k, V) logits tensor was the biggest prefill temp
+        return tf.forward(params, batch, cfg, ctx, remat_policy="none",
+                          scan_unroll=unroll, last_token_only=True)
+
+    return prefill
+
+
+def _micro_batches(cfg, shape: str, chips: int) -> int:
+    """Pick the gradient-accumulation factor so per-device activation
+    checkpoints stay ~<= 4GB: layers x tokens_local x d_model x 2B."""
+    if SHAPES[shape]["kind"] != "train":
+        return 1
+    B, S = SHAPES[shape]["global_batch"], SHAPES[shape]["seq_len"]
+    dp = max(1, chips // 16)  # data(-and-pod) shards; model axis is 16
+    tokens_local = (B // dp) * S
+    ckpt_bytes = cfg.num_layers * tokens_local * cfg.d_model * 2
+    target = 2 * 1024**3
+    n = 1
+    # each microbatch must still shard over all dp ranks: dp | (B / n)
+    while ckpt_bytes / n > target and (B // (2 * n)) % dp == 0:
+        n *= 2
+    return n
+
+
+def _decode_fn(cfg, ctx, unroll=1):
+    def decode(params, cache, tokens, pos):
+        return tf.decode_step(params, cache, tokens, pos, cfg, ctx,
+                              scan_unroll=unroll)
+
+    return decode
+
+
+def _with_groups(cfg, g: int):
+    """Same prefix/suffix structure, ``g`` scanned groups."""
+    from ..models.transformer import _layer_plan
+
+    prefix, pat, _groups, suffix = _layer_plan(cfg)
+    return cfg.replace(
+        num_layers=len(prefix) + g * len(pat) + len(suffix)
+    )
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool, cfg=None,
+               unroll: int | bool = 1, rules=None, remat: str = "full",
+               n_micro: int | None = None, cache_dtype=None):
+    """Returns (lowered, chips, meta) for one LM cell.  The keyword
+    overrides (rules / remat / n_micro / cache_dtype) are the §Perf
+    hillclimb levers."""
+    cfg = cfg or get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    kind = SHAPES[shape]["kind"]
+    if rules is None:
+        rules = TRAIN_RULES if kind == "train" else DECODE_RULES
+    ctx = MeshContext(mesh, rules)
+
+    params = param_specs_abstract(cfg, ctx, jnp.bfloat16)
+    batch = batch_specs(cfg, shape, ctx)
+
+    if kind == "train":
+        if n_micro is None:
+            n_micro = _micro_batches(cfg, shape, chips)
+        state = {"params": params, "opt": opt_state_abstract(params)}
+        fn = jax.jit(_train_step_fn(cfg, ctx, unroll, n_micro, remat),
+                     donate_argnums=(0,))
+        lowered = fn.lower(state, batch)
+    elif kind == "prefill":
+        fn = jax.jit(_prefill_fn(cfg, ctx, unroll))
+        lowered = fn.lower(params, batch)
+    else:  # decode
+        cache = cache_specs(cfg, shape, ctx, dtype=cache_dtype)
+        tokens = batch["tokens"]
+        pos = jax.ShapeDtypeStruct((), jnp.int32)
+        fn = jax.jit(_decode_fn(cfg, ctx, unroll), donate_argnums=(1,))
+        lowered = fn.lower(params, cache, tokens, pos)
+    tokens_processed = (
+        SHAPES[shape]["global_batch"] * SHAPES[shape]["seq_len"]
+        if kind in ("train", "prefill") else SHAPES[shape]["global_batch"]
+    )
+    meta = {
+        "arch": arch, "shape": shape, "kind": kind, "chips": chips,
+        "tokens": tokens_processed,
+        "model_flops": rf.model_flops(get_config(arch), tokens_processed),
+    }
+    return lowered, chips, meta
+
+
+def lower_index_cell(shape_kind: str, *, multi_pod: bool):
+    """The paper's workload: build = prefix doubling rounds; serve = batched
+    FM counting.  Uses the flat 'parts' mesh over every chip."""
+    from ..configs.bwt_index import CONFIG as icfg
+    from ..core.dist_suffix_array import DistSAConfig, _isa_jit
+    from ..core.dist_fm import DistFMIndex, _count_jit
+    from ..core.fm_index import PAD
+
+    mesh = make_index_mesh(multi_pod=multi_pod)
+    parts = mesh.size
+    n = icfg.n
+    if shape_kind == "build":
+        cfg = DistSAConfig(axis="parts", engine=icfg.engine,
+                           capacity_factor=icfg.capacity_factor,
+                           rounds=icfg.rounds)
+        s = jax.ShapeDtypeStruct(
+            (n,), jnp.int32,
+            sharding=jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec("parts")),
+        )
+        lowered = _isa_jit.lower(s, icfg.sigma, cfg, parts, mesh)
+        meta = {"arch": "bwt_index", "shape": f"build_n{n}", "kind": "build",
+                "chips": parts, "tokens": n, "model_flops": 0.0}
+        return lowered, parts, meta
+    # serve
+    m = n // parts
+    r = icfg.sample_rate
+    sharding = lambda spec: jax.sharding.NamedSharding(  # noqa: E731
+        mesh, jax.sharding.PartitionSpec(*spec))
+    arrays = (
+        jax.ShapeDtypeStruct((n,), jnp.int32, sharding=sharding(("parts",))),
+        jax.ShapeDtypeStruct((n // r, icfg.sigma), jnp.int32,
+                             sharding=sharding(("parts", None))),
+        jax.ShapeDtypeStruct((icfg.sigma,), jnp.int32, sharding=sharding((None,))),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    patterns = jax.ShapeDtypeStruct(
+        (icfg.query_batch, icfg.query_len), jnp.int32, sharding=sharding((None, None)),
+    )
+    aux = (r, icfg.sigma, n, parts)
+    lowered = _count_jit.lower(arrays, patterns, aux, mesh)
+    meta = {"arch": "bwt_index", "shape": f"serve_b{icfg.query_batch}",
+            "kind": "serve", "chips": parts, "tokens": icfg.query_batch,
+            "model_flops": 0.0}
+    return lowered, parts, meta
+
+
+def _corrected_roofline(arch, shape, *, multi_pod, chips, meta):
+    """XLA cost_analysis counts a while/scan body ONCE, so roofline terms
+    come from two shallow UNROLLED compiles (1 and 2 scan groups) linearly
+    extrapolated to the real depth (DESIGN.md §8)."""
+    cfg = get_config(arch)
+    from ..models.transformer import _layer_plan
+
+    _, _, G, _ = _layer_plan(cfg)
+    points = []
+    for g in (1, 2):
+        low, _, _ = lower_cell(
+            arch, shape, multi_pod=multi_pod, cfg=_with_groups(cfg, g),
+            unroll=True,
+        )
+        comp = low.compile()
+        r = rf.analyze(comp, chips)
+        points.append(r)
+    r1, r2 = points
+
+    def extrap(a, b):
+        # deeper models can't cost less: fusion noise between the two aux
+        # compiles occasionally gives b < a; floor at the observed points
+        return max(a + (G - 1) * (b - a), a, b, 0.0)
+
+    corrected = rf.Roofline(
+        flops_per_device=extrap(r1.flops_per_device, r2.flops_per_device),
+        bytes_per_device=extrap(r1.bytes_per_device, r2.bytes_per_device),
+        collective_bytes_per_device=extrap(
+            r1.collective_bytes_per_device, r2.collective_bytes_per_device
+        ),
+        collective_detail={
+            "counts_per_group": {
+                k: r2.collective_detail["counts"].get(k, 0)
+                - r1.collective_detail["counts"].get(k, 0)
+                for k in set(r1.collective_detail["counts"])
+                | set(r2.collective_detail["counts"])
+            },
+            "bytes": {
+                k: extrap(
+                    r1.collective_detail["bytes"].get(k, 0),
+                    r2.collective_detail["bytes"].get(k, 0),
+                )
+                for k in set(r1.collective_detail["bytes"])
+                | set(r2.collective_detail["bytes"])
+            },
+        },
+        chips=chips,
+    )
+    return corrected
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, compile_: bool = True,
+             correct_costs: bool = True):
+    t0 = time.time()
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if arch == "bwt_index":
+        lowered, chips, meta = lower_index_cell(shape, multi_pod=multi_pod)
+    else:
+        cfg = get_config(arch)
+        reason = shape_skip_reason(cfg, shape)
+        if reason:
+            return {"arch": arch, "shape": shape, "mesh": mesh_name,
+                    "status": "skipped", "reason": reason}
+        lowered, chips, meta = lower_cell(arch, shape, multi_pod=multi_pod)
+    lower_s = time.time() - t0
+    result = dict(meta, mesh=mesh_name, status="lowered", lower_s=lower_s)
+    if not compile_:
+        return result
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    result["compile_s"] = time.time() - t1
+    result["status"] = "compiled"
+
+    try:
+        mem = compiled.memory_analysis()
+        result["memory"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # noqa: BLE001 - backend-dependent
+        result["memory"] = {"error": str(e)}
+
+    roof = rf.analyze(compiled, chips)
+    result["roofline_raw"] = roof.to_dict()
+
+    if arch != "bwt_index" and correct_costs:
+        corrected = _corrected_roofline(
+            arch, shape, multi_pod=multi_pod, chips=chips, meta=meta
+        )
+        result["roofline"] = corrected.to_dict()
+    else:
+        result["roofline"] = result["roofline_raw"]
+
+    if meta.get("model_flops"):
+        result["roofline"]["model_flops"] = meta["model_flops"]
+        hw = result["roofline"]["flops_per_device"] * chips
+        result["roofline"]["useful_flops_ratio"] = (
+            meta["model_flops"] / hw if hw else None
+        )
+    return result
+
+
+def save_result(res: dict):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    name = f"{res['arch']}__{res['shape']}__{res['mesh']}.json"
+    with open(os.path.join(OUT_DIR, name), "w") as f:
+        json.dump(res, f, indent=2, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    lm_archs = [a for a in ARCH_IDS if a != "bwt_index"]
+    archs = lm_archs + ["bwt_index"] if args.arch == "all" else [args.arch]
+    pods = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.multi_pod
+    ]
+
+    cells = []
+    for arch in archs:
+        shapes = (
+            ["build", "serve"] if arch == "bwt_index"
+            else (list(SHAPES) if args.shape == "all" else [args.shape])
+        )
+        for shape in shapes:
+            for mp in pods:
+                cells.append((arch, shape, mp))
+
+    if args.list:
+        for c in cells:
+            print(c)
+        return
+
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+        try:
+            res = run_cell(arch, shape, multi_pod=mp,
+                           compile_=not args.no_compile)
+            save_result(res)
+            r = res.get("roofline", {})
+            print(
+                f"[{res['status']:9s}] {tag}  "
+                f"lower={res.get('lower_s', 0):.1f}s "
+                f"compile={res.get('compile_s', 0):.1f}s "
+                f"bottleneck={r.get('bottleneck', '-')}"
+            , flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"[FAILED   ] {tag}", flush=True)
+            traceback.print_exc()
+            save_result({"arch": arch, "shape": shape,
+                         "mesh": "2x16x16" if mp else "16x16",
+                         "status": "failed",
+                         "error": traceback.format_exc()})
+    print(f"done, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

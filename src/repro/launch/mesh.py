@@ -1,0 +1,42 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run forces 512 host devices; tests and benches
+must keep seeing 1).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e pod mesh: 16x16 = 256 chips per pod; 2 pods for multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_index_mesh(*, multi_pod: bool = False, parts: int | None = None):
+    """Flat mesh for the BWT index build: the sort network spans every chip
+    (DESIGN.md §6), so all mesh axes collapse into one 'parts' axis."""
+    if parts is None:
+        parts = 512 if multi_pod else 256
+    return jax.make_mesh((parts,), ("parts",))
+
+
+def make_debug_mesh(devices: int | None = None):
+    """Small (pod, data, model) mesh over however many (possibly forced-host)
+    devices exist — used by distributed tests."""
+    n = devices or len(jax.devices())
+    if n == 1:
+        return jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    if n % 2:
+        raise ValueError(f"need an even device count, got {n}")
+    model = 2
+    rest = n // 2
+    data = rest if rest % 2 else rest  # keep pod=1 unless n >= 8
+    pod = 1
+    if n >= 8:
+        pod, data = 2, n // (2 * model)
+    return jax.make_mesh((pod, data, model), ("pod", "data", "model"))

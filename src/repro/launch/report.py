@@ -1,0 +1,106 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON
+artifacts in experiments/dryrun/.
+
+    PYTHONPATH=src python -m repro.launch.report > experiments/roofline.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def load_cells():
+    cells = []
+    for f in sorted(glob.glob(os.path.join(OUT_DIR, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+HBM_PER_CHIP = 16 * 1024**3  # TPU v5e
+
+
+def dryrun_table(cells):
+    rows = ["| arch | shape | mesh | status | HBM/device | fits 16GB | compile |",
+            "|---|---|---|---|---|---|---|"]
+    for c in cells:
+        mem = c.get("memory", {})
+        per_dev = None
+        if isinstance(mem, dict) and "temp_size_in_bytes" in mem:
+            # memory_analysis of the SPMD-partitioned module is per-device
+            per_dev = (
+                mem.get("argument_size_in_bytes", 0)
+                + mem.get("temp_size_in_bytes", 0)
+                + mem.get("output_size_in_bytes", 0)
+            )
+        status = c["status"]
+        if status == "skipped":
+            status = f"skipped ({c['reason'][:40]}...)"
+        fits = "-" if per_dev is None else (
+            "yes" if per_dev <= HBM_PER_CHIP else "**NO**"
+        )
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | {status} | "
+            f"{fmt_bytes(per_dev)} | {fits} | {c.get('compile_s', 0):.0f}s |"
+        )
+    return "\n".join(rows)
+
+
+def roofline_table(cells):
+    rows = [
+        "| arch | shape | mesh | compute s | memory s | collective s | "
+        "bottleneck | MODEL/HLO flops | step s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        if c.get("status") != "compiled":
+            continue
+        r = c.get("roofline", {})
+        ratio = r.get("useful_flops_ratio")
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+            f"{r.get('compute_s', 0):.4f} | {r.get('memory_s', 0):.4f} | "
+            f"{r.get('collective_s', 0):.4f} | **{r.get('bottleneck')}** | "
+            f"{ratio:.2f} | {r.get('step_time_s', 0):.3f} |"
+            if ratio is not None else
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+            f"{r.get('compute_s', 0):.4f} | {r.get('memory_s', 0):.4f} | "
+            f"{r.get('collective_s', 0):.4f} | **{r.get('bottleneck')}** | "
+            f"- | {r.get('step_time_s', 0):.3f} |"
+        )
+    return "\n".join(rows)
+
+
+def summarize(cells):
+    n = {"compiled": 0, "skipped": 0, "failed": 0}
+    for c in cells:
+        n[c.get("status", "failed")] = n.get(c.get("status", "failed"), 0) + 1
+    return n
+
+
+def main():
+    cells = load_cells()
+    print("## Dry-run matrix\n")
+    print(dryrun_table(cells))
+    print("\n## Roofline terms\n")
+    print(roofline_table(cells))
+    print("\nsummary:", summarize(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (DESIGN.md §8):
+
+    compute    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory     = HLO_bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+``cost_analysis()`` of the SPMD-partitioned executable reports per-device
+flops/bytes.  Collective bytes are not in cost_analysis: we parse the
+post-SPMD HLO text and apply per-op byte formulas (ring all-reduce moves
+~2x the shard, all-gather moves the output minus the local shard, etc.).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+# TPU v5e constants (per assignment)
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (conservative single-link)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(txt: str) -> int:
+    """Total bytes of all array shapes in an HLO type string (handles
+    tuples '(f32[..], s32[..])')."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_op: dict
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Per-device bytes moved by collectives, from post-SPMD HLO.
+
+    Byte model (per device):
+      all-gather      : output - input      (receives everyone else's shard)
+      reduce-scatter  : input - output      (sends everything but its shard)
+      all-reduce      : 2 * (input)         (ring: reduce-scatter+all-gather)
+      all-to-all      : input               (sends its full buffer)
+      collective-permute : input            (one send)
+    """
+    counts: dict[str, int] = {}
+    by_op: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", line)
+        if not m:
+            continue
+        out_type, op = m.group(1), m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op == c + "-start" or op == c.replace("-", "_"):
+                kind = c
+                break
+        if kind is None:
+            continue
+        out_b = _shape_bytes(out_type)
+        # operand types: everything inside the call parens (HLO sometimes
+        # prints bare operand names — fall back to the output shape, which
+        # equals the input for permute / all-to-all / all-reduce)
+        args = line[line.index("(") :]
+        in_b = _shape_bytes(args)
+        if kind == "all-gather":
+            moved = max(out_b - in_b, 0) if in_b else out_b
+        elif kind == "reduce-scatter":
+            moved = max(in_b - out_b, 0) if in_b else out_b
+        elif kind == "all-reduce":
+            moved = 2 * (in_b or out_b)
+        else:  # all-to-all, collective-permute
+            moved = in_b or out_b
+        counts[kind] = counts.get(kind, 0) + 1
+        by_op[kind] = by_op.get(kind, 0) + moved
+    return CollectiveStats(counts, by_op)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_detail: dict
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Perfect-overlap model: max of the three terms."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "collective_detail": self.collective_detail,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+        }
+
+
+def analyze(compiled, chips: int) -> Roofline:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older API returned [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    stats = collective_bytes(compiled.as_text())
+    return Roofline(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=float(stats.total_bytes),
+        collective_detail={
+            "counts": stats.counts, "bytes": stats.bytes_by_op
+        },
+        chips=chips,
+    )
+
+
+def model_flops(cfg, tokens: int) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) — the useful-compute
+    yardstick for the HLO_FLOPs ratio."""
+    from ..models.transformer import count_active_params
+
+    return 6.0 * count_active_params(cfg) * tokens

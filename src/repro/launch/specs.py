@@ -1,0 +1,142 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation anywhere: params/opt-state/caches/batches are abstract,
+with NamedShardings attached so ``jit(...).lower()`` sees the production
+layout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..models import transformer as tf
+from ..sharding import MeshContext
+from ..training.optimizer import init_opt_state
+
+# the assigned input-shape sets (LM shapes are seq_len x global_batch)
+SHAPES = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+
+def shape_skip_reason(cfg: ArchConfig, shape: str) -> str | None:
+    """DESIGN.md §5 skip rules."""
+    if shape == "long_500k" and not cfg.subquadratic:
+        return (
+            "pure full-attention arch: 0.5M-token decode needs sub-quadratic "
+            "attention (skip per assignment; DESIGN.md §5)"
+        )
+    return None
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=NamedSharding(mesh, spec)
+    )
+
+
+def _batch_axes_for(B: int, ctx: MeshContext):
+    """batch sharding with divisibility fallback (long_500k has B=1: the
+    data axis idles — documented single-stream latency shape)."""
+    bdp = ctx.batch_axes
+    if bdp and B % ctx.axis_size(bdp) == 0:
+        return bdp
+    for ax in bdp or ():
+        if B % ctx.mesh.shape[ax] == 0 and ctx.mesh.shape[ax] > 1:
+            return (ax,)
+    return None
+
+
+def batch_specs(cfg: ArchConfig, shape: str, ctx: MeshContext) -> dict:
+    info = SHAPES[shape]
+    B, S = info["global_batch"], info["seq_len"]
+    bdp = _batch_axes_for(B, ctx)
+    mesh = ctx.mesh
+    if info["kind"] in ("train", "prefill"):
+        out: dict[str, Any] = {}
+        if cfg.frontend != "none":
+            out["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16, mesh,
+                                 P(bdp, None, None))
+        else:
+            out["tokens"] = _sds((B, S), jnp.int32, mesh, P(bdp, None))
+        if info["kind"] == "train":
+            out["labels"] = _sds((B, S), jnp.int32, mesh, P(bdp, None))
+        return out
+    # decode: one new token; S is the cache length
+    return {"tokens": _sds((B, 1), jnp.int32, mesh, P(bdp, None))}
+
+
+def _cache_spec_for_path(path, leaf_shape, cfg: ArchConfig, ctx: MeshContext,
+                         batch: int):
+    """Sharding for one KV-cache leaf, by leaf name."""
+    bdp = _batch_axes_for(batch, ctx)
+    name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+    model = ctx.model_axis
+    def fits(dim, ax):
+        return ax and leaf_shape[dim] % ctx.mesh.shape[ax] == 0
+    if name in ("k", "v"):          # (..., B, T, Hkv, hd)
+        # shard the SEQ dim over model: divisible for every arch (32k % 16)
+        # where head counts (1, 8, 24, 56...) often are not — the fix that
+        # brought MHA decode caches under HBM (EXPERIMENTS.md §Perf)
+        seq_ax = model if fits(len(leaf_shape) - 3, model) else None
+        return P(*([None] * (len(leaf_shape) - 4)), bdp, seq_ax, None, None)
+    if name in ("ckv", "k_rope"):   # (..., B, T, r)
+        seq_ax = model if fits(len(leaf_shape) - 2, model) else None
+        return P(*([None] * (len(leaf_shape) - 3)), bdp, seq_ax, None)
+    if name == "conv":              # (..., B, K-1, C)
+        ch_ax = model if fits(len(leaf_shape) - 1, model) else None
+        return P(*([None] * (len(leaf_shape) - 3)), bdp, None, ch_ax)
+    if name == "ssm":               # (..., B, nh, hd, state)
+        h_ax = model if fits(len(leaf_shape) - 3, model) else None
+        return P(*([None] * (len(leaf_shape) - 4)), bdp, h_ax, None, None)
+    if name == "h":                 # (..., B, 1, w) rg-lru state
+        w_ax = model if fits(len(leaf_shape) - 1, model) else None
+        return P(*([None] * (len(leaf_shape) - 3)), bdp, None, w_ax)
+    return P(*([None] * len(leaf_shape)))
+
+
+def cache_specs(cfg: ArchConfig, shape: str, ctx: MeshContext, dtype=None):
+    info = SHAPES[shape]
+    B, S = info["global_batch"], info["seq_len"]
+    cache_shapes = jax.eval_shape(
+        lambda: tf.init_cache(cfg, B, S, dtype or jnp.bfloat16)
+    )
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    leaves = [
+        _sds(l.shape, l.dtype, ctx.mesh,
+             _cache_spec_for_path(path, l.shape, cfg, ctx, B))
+        for path, l in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def param_specs_abstract(cfg: ArchConfig, ctx: MeshContext, dtype=jnp.bfloat16):
+    """Abstract params with production shardings attached."""
+    specs = tf.model_specs(cfg)
+    shardings = tf.model_shardings(cfg, ctx)
+    abstract = tf.abstract_model(cfg, dtype)
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract, shardings,
+    )
+
+
+def opt_state_abstract(params_abstract):
+    """Abstract AdamW state (f32 m/v shaped+sharded like params)."""
+    def f32_like(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32, sharding=p.sharding)
+
+    return {
+        "m": jax.tree_util.tree_map(f32_like, params_abstract),
+        "v": jax.tree_util.tree_map(f32_like, params_abstract),
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,72 @@
+"""Production training launcher.
+
+On a real TPU pod each host runs:
+
+    python -m repro.launch.train --arch qwen2p5_3b --steps 10000 \
+        --ckpt-dir gs://bucket/run1 --resume
+
+In this CPU container it runs reduced configs on a 1-device mesh (the same
+code path — mesh construction is the only difference), which is what the
+integration test exercises.  jax.distributed.initialize() is called when a
+cluster environment is detected (TPU pods set the env automatically).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--reduced", action="store_true", default=True,
+                    help="use the reduced config (full configs need a pod)")
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    # multi-host: initialize the distributed runtime when launched by a
+    # cluster scheduler (GKE/TPU-VM set these; single process skips)
+    if "JAX_COORDINATOR_ADDRESS" in os.environ:
+        jax.distributed.initialize()
+
+    from ..configs.base import get_config, get_reduced_config
+    from ..data.corpus import corpus
+    from ..data.loader import LoaderConfig, TokenLoader
+    from ..launch.mesh import make_production_mesh
+    from ..sharding import TRAIN_RULES, MeshContext, single_device_context
+    from ..training.optimizer import AdamWConfig
+    from ..training.train_loop import TrainConfig, train
+
+    if args.reduced:
+        cfg = get_reduced_config(args.arch)
+        ctx = single_device_context()
+    else:
+        cfg = get_config(args.arch)
+        ctx = MeshContext(make_production_mesh(), TRAIN_RULES)
+
+    toks = corpus("english", 1 << 17) % (cfg.vocab_size - 1) + 1
+    loader = TokenLoader(toks, LoaderConfig(args.batch, args.seq, args.seed))
+    tcfg = TrainConfig(
+        opt=AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                        total_steps=args.steps),
+        compress_grads=args.compress_grads,
+        checkpoint_every=max(1, args.steps // 5),
+    )
+    res = train(cfg, ctx, tcfg, loader, args.steps, ckpt_dir=args.ckpt_dir,
+                resume=args.resume, seed=args.seed)
+    print(f"final loss {res['losses'][-1]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

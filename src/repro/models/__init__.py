@@ -1,0 +1,3 @@
+"""Pure-JAX model zoo: param-spec system (common), attention/MLP/MoE blocks,
+SSM recurrences (Mamba2 SSD, RG-LRU), and the pattern-stacked decoder
+(transformer) with train / cached-decode entry points."""

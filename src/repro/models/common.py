@@ -1,0 +1,151 @@
+"""Module-less parameter system + shared layers (pure JAX, no flax).
+
+A model is described by a pytree of ``ParamSpec`` (shape, logical axes,
+initializer).  From the same spec tree we derive:
+  * real parameters           (``init_params`` — smoke tests, examples)
+  * abstract parameters       (``abstract_params`` — dry-run lowering)
+  * shardings                 (``param_shardings`` — via sharding.MeshContext)
+
+Apply functions consume plain dict pytrees, so models stay first-class JAX.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]           # logical axis names, len == ndim
+    init: str = "normal"                   # 'normal' | 'zeros' | 'ones' | 'small'
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _make(spec: ParamSpec, key, dtype):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    scale = spec.scale
+    if spec.init == "small":
+        scale = spec.scale / max(1, int(np.sqrt(np.prod(spec.shape[:-1]) or 1)))
+    return (jax.random.normal(key, spec.shape) * scale).astype(dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(spec_tree, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_make(s, k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_params(spec_tree, dtype=jnp.float32):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), spec_tree, is_leaf=is_spec
+    )
+
+
+def param_shardings(spec_tree, ctx):
+    return jax.tree_util.tree_map(
+        lambda s: ctx.sharding_for(s.axes, s.shape), spec_tree, is_leaf=is_spec
+    )
+
+
+def stack_specs(spec_tree, n: int, axis_name: str = "layers"):
+    """Spec tree for ``n`` scan-stacked copies of a layer."""
+    return jax.tree_util.tree_map(
+        lambda s: ParamSpec((n, *s.shape), (axis_name, *s.axes), s.init, s.scale),
+        spec_tree, is_leaf=is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# shared layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim) or (..., seq, head_dim);
+    positions: (..., seq) int32."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, hd/2)
+    if x.ndim == angles.ndim + 1:                              # heads present
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def cross_entropy_loss(logits, labels, mask=None):
+    """SPMD-friendly CE: all reductions stay sharded (vocab may be sharded).
+
+    logits (B, S, V) any float dtype; labels (B, S) int32.  Returns mean loss
+    over unmasked positions (float32).
+
+    Memory note: the label selection uses a boolean iota comparison, never a
+    float one-hot — a (B, S, V) f32 one-hot was the single biggest train-step
+    temp at 150k-vocab scale (EXPERIMENTS.md §Perf, baseline-fix pass).
+    """
+    logits = logits.astype(jnp.float32)
+    vmax = jnp.max(logits, axis=-1, keepdims=True)
+    shifted = logits - jax.lax.stop_gradient(vmax)
+    logsumexp = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    vocab = logits.shape[-1]
+    is_label = (
+        jax.lax.broadcasted_iota(jnp.int32, logits.shape, 2)
+        == labels[..., None]
+    )
+    label_logit = jnp.sum(jnp.where(is_label, shifted, 0.0), axis=-1)
+    nll = logsumexp - label_logit
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def dense(x, w, b=None):
+    y = jnp.einsum("...d,df->...f", x, w).astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv.  x (B, S, C), w (K, C).  With ``state``
+    (B, K-1, C) given, performs a streaming step (S may be 1) and returns
+    (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                    # (B, S+K-1, C)
+    # windows: y[t] = sum_k w[k] * xp[t + k]
+    y = sum(xp[:, k : k + x.shape[1], :] * w[k] for k in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else jnp.zeros_like(pad)
+    return y.astype(x.dtype), new_state

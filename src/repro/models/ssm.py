@@ -1,0 +1,267 @@
+"""State-space blocks: Mamba2 SSD (state-space duality) and RG-LRU (Griffin).
+
+Both are sub-quadratic: training uses chunked/associative scans; decode keeps
+an O(1) recurrent state, which is what makes the ``long_500k`` shape feasible
+for these families (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from ..sharding import MeshContext, constrain
+from .common import ParamSpec, causal_conv1d, dense, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 SSD (arXiv:2405.21060, ssd_minimal_discrete adapted to JAX)
+# ---------------------------------------------------------------------------
+
+def mamba2_specs(cfg: ArchConfig) -> dict:
+    d, di, n, g = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    nh = di // cfg.ssm_headdim
+    conv_ch = di + 2 * g * n
+    return {
+        # in_proj packs [z (gate), x, B, C, dt]
+        "in_proj": ParamSpec(
+            (d, 2 * di + 2 * g * n + nh), ("fsdp", "inner")
+        ),
+        "conv_w": ParamSpec((cfg.conv_width, conv_ch), ("conv", "inner")),
+        "conv_b": ParamSpec((conv_ch,), ("inner",), init="zeros"),
+        "A_log": ParamSpec((nh,), ("heads",), init="ones"),
+        "D": ParamSpec((nh,), ("heads",), init="ones"),
+        "dt_bias": ParamSpec((nh,), ("heads",), init="zeros"),
+        "norm": ParamSpec((di,), ("inner",), init="zeros"),
+        "out_proj": ParamSpec((di, d), ("inner", "fsdp")),
+    }
+
+
+def _segsum(x):
+    """Stable segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k], -inf j>i."""
+    L = x.shape[-1]
+    x = jnp.repeat(x[..., None], L, axis=-1)                  # (..., i, j)
+    mask = jnp.tril(jnp.ones((L, L), bool), k=-1)
+    x = jnp.where(mask, x, 0)
+    x_segsum = jnp.cumsum(x, axis=-2)
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, x_segsum, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, initial_state=None):
+    """SSD over chunks.  x (b, s, h, p); dt (b, s, h); A (h,) negative;
+    B, C (b, s, g, n).  Returns (y (b,s,h,p), final_state (b,h,p,n))."""
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    rep = h // g
+
+    def to_chunks(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+
+    xc, dtc = to_chunks(x), to_chunks(dt)
+    Bc = jnp.repeat(to_chunks(B), rep, axis=3)                # (b,c,l,h,n)
+    Cc = jnp.repeat(to_chunks(C), rep, axis=3)
+
+    dA = dtc * A[None, None, None, :]                         # (b,c,l,h) <= 0
+    dA_cs = jnp.cumsum(dA, axis=2)                            # within-chunk
+
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))            # (b,c,h,l,l)
+    att = jnp.einsum("bclhn,bcshn,bchls->bchls", Cc, Bc, L)
+    y_diag = jnp.einsum("bchls,bcshp,bcsh->bclhp", att, xc, dtc)
+
+    # 2. chunk states
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)       # (b,c,l,h)
+    states = jnp.einsum("bclhn,bclh,bclh,bclhp->bchpn",
+                        Bc, decay_states, dtc, xc)
+
+    # 3. inter-chunk recurrence over c (associative scan on (decay, state))
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                 # (b,c,h)
+
+    def combine(a, b_):
+        d1, s1 = a
+        d2, s2 = b_
+        return d1 * d2, s2 + d2[..., None, None] * s1
+
+    if initial_state is not None:
+        states = jnp.concatenate([initial_state[:, None], states], axis=1)
+        chunk_decay = jnp.concatenate(
+            [jnp.ones((b, 1, h), chunk_decay.dtype), chunk_decay], axis=1
+        )
+        dec_sc, st_sc = lax.associative_scan(combine, (chunk_decay, states), axis=1)
+        prev_states = st_sc[:, :-1]                           # state BEFORE chunk c
+        final_state = st_sc[:, -1]
+    else:
+        dec_sc, st_sc = lax.associative_scan(combine, (chunk_decay, states), axis=1)
+        prev_states = jnp.concatenate(
+            [jnp.zeros_like(st_sc[:, :1]), st_sc[:, :-1]], axis=1
+        )
+        final_state = st_sc[:, -1]
+
+    # 4. inter-chunk output
+    state_decay_out = jnp.exp(dA_cs)                          # (b,c,l,h)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                       Cc, prev_states, state_decay_out)
+
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y, final_state
+
+
+def _mamba2_project(p, x, cfg: ArchConfig):
+    di, n, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    nh = di // cfg.ssm_headdim
+    zxbcdt = dense(x, p["in_proj"])
+    z, xin, Bf, Cf, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1
+    )
+    dt = jax.nn.softplus(dt + p["dt_bias"].astype(dt.dtype))
+    return z, xin, Bf, Cf, dt
+
+
+def mamba2_block(p, x, cfg: ArchConfig, ctx: MeshContext):
+    """Full-sequence Mamba2 block.  x (B, S, d)."""
+    Bsz, S, _ = x.shape
+    di, n, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    hd = cfg.ssm_headdim
+    nh = di // hd
+    z, xin, Bf, Cf, dt = _mamba2_project(p, x, cfg)
+    conv_in = jnp.concatenate([xin, Bf, Cf], axis=-1)
+    conv_out, _ = causal_conv1d(conv_in, p["conv_w"])
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(conv_out.dtype))
+    xin, Bf, Cf = jnp.split(conv_out, [di, di + g * n], axis=-1)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (nh,)
+    xh = xin.reshape(Bsz, S, nh, hd)
+    Bh = Bf.reshape(Bsz, S, g, n)
+    Ch = Cf.reshape(Bsz, S, g, n)
+    y, _ = ssd_chunked(
+        xh.astype(jnp.float32), dt.astype(jnp.float32), A,
+        Bh.astype(jnp.float32), Ch.astype(jnp.float32), cfg.ssd_chunk,
+    )
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bsz, S, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = dense(y, p["out_proj"])
+    return constrain(out, ctx, ("batch", None, None))
+
+
+def mamba2_init_cache(cfg: ArchConfig, batch: int, dtype):
+    di, n, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    nh = di // cfg.ssm_headdim
+    conv_ch = di + 2 * g * n
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, nh, cfg.ssm_headdim, n), jnp.float32),
+    }
+
+
+def mamba2_decode(p, x, cache, pos, cfg: ArchConfig, ctx: MeshContext):
+    """One-token recurrent step.  x (B, 1, d)."""
+    Bsz = x.shape[0]
+    di, n, g = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups
+    hd = cfg.ssm_headdim
+    nh = di // hd
+    z, xin, Bf, Cf, dt = _mamba2_project(p, x, cfg)
+    conv_in = jnp.concatenate([xin, Bf, Cf], axis=-1)
+    conv_out, conv_state = causal_conv1d(conv_in, p["conv_w"], cache["conv"])
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(conv_out.dtype))
+    xin, Bf, Cf = jnp.split(conv_out, [di, di + g * n], axis=-1)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(Bsz, nh, hd).astype(jnp.float32)
+    Bh = jnp.repeat(Bf.reshape(Bsz, g, n), nh // g, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cf.reshape(Bsz, g, n), nh // g, axis=1).astype(jnp.float32)
+    dts = dt.reshape(Bsz, nh).astype(jnp.float32)
+
+    decay = jnp.exp(dts * A[None, :])                         # (B, nh)
+    h_new = (
+        cache["ssm"] * decay[:, :, None, None]
+        + jnp.einsum("bh,bhn,bhp->bhpn", dts, Bh, xh)
+    )
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, h_new)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(Bsz, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = dense(y, p["out_proj"])
+    return out, {"conv": conv_state, "ssm": h_new}
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427)
+# ---------------------------------------------------------------------------
+
+RG_LRU_C = 8.0
+
+
+def rglru_specs(cfg: ArchConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    return {
+        "in_x": ParamSpec((d, w), ("fsdp", "inner")),
+        "in_gate": ParamSpec((d, w), ("fsdp", "inner")),
+        "conv_w": ParamSpec((cfg.conv_width, w), ("conv", "inner")),
+        "conv_b": ParamSpec((w,), ("inner",), init="zeros"),
+        "lambda_p": ParamSpec((w,), ("inner",), init="ones", scale=1.0),
+        "w_a": ParamSpec((w, w), ("inner", None), init="small"),
+        "b_a": ParamSpec((w,), ("inner",), init="zeros"),
+        "w_i": ParamSpec((w, w), ("inner", None), init="small"),
+        "b_i": ParamSpec((w,), ("inner",), init="zeros"),
+        "out": ParamSpec((w, d), ("inner", "fsdp")),
+    }
+
+
+def _rglru_gates(p, xw):
+    """log a_t (<=0) and gated input; xw (..., w)."""
+    r = jax.nn.sigmoid(dense(xw, p["w_a"]) + p["b_a"].astype(xw.dtype))
+    i = jax.nn.sigmoid(dense(xw, p["w_i"]) + p["b_i"].astype(xw.dtype))
+    log_a = (
+        -RG_LRU_C
+        * jax.nn.softplus(p["lambda_p"].astype(jnp.float32))
+        * r.astype(jnp.float32)
+    )
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, None))
+    gated = mult * i.astype(jnp.float32) * xw.astype(jnp.float32)
+    return a, gated
+
+
+def rglru_block(p, x, cfg: ArchConfig, ctx: MeshContext):
+    """Full-sequence Griffin recurrent block.  x (B, S, d)."""
+    gate = jax.nn.gelu(dense(x, p["in_gate"]))
+    xw = dense(x, p["in_x"])
+    xw, _ = causal_conv1d(xw, p["conv_w"])
+    xw = xw + p["conv_b"].astype(xw.dtype)
+    a, gated = _rglru_gates(p, xw)
+
+    def combine(c1, c2):
+        a1, h1 = c1
+        a2, h2 = c2
+        return a1 * a2, h2 + a2 * h1
+
+    _, h = lax.associative_scan(combine, (a, gated), axis=1)
+    y = (h.astype(x.dtype) * gate)
+    out = dense(y, p["out"])
+    return constrain(out, ctx, ("batch", None, None))
+
+
+def rglru_init_cache(cfg: ArchConfig, batch: int, dtype):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+        "h": jnp.zeros((batch, 1, w), jnp.float32),
+    }
+
+
+def rglru_decode(p, x, cache, pos, cfg: ArchConfig, ctx: MeshContext):
+    gate = jax.nn.gelu(dense(x, p["in_gate"]))
+    xw = dense(x, p["in_x"])
+    xw, conv_state = causal_conv1d(xw, p["conv_w"], cache["conv"])
+    xw = xw + p["conv_b"].astype(xw.dtype)
+    a, gated = _rglru_gates(p, xw)
+    h = a * cache["h"] + gated
+    y = (h.astype(x.dtype) * gate)
+    out = dense(y, p["out"])
+    return out, {"conv": conv_state, "h": h}

@@ -1,0 +1,319 @@
+"""Decoder assembly: pattern-based layer stacking, scan + remat, train loss,
+and cached decode — one code path for all ten assigned architectures.
+
+Layer pattern (cfg.layer_pattern, default by family) repeats over the depth;
+the repeating groups are scan-stacked (compile time independent of depth),
+any remainder/prefix layers are unrolled.  DeepSeek's leading dense-FFN
+layer(s) are the ``prefix``; RecurrentGemma's (rglru, rglru, attn) pattern
+scans over 3-layer groups.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..configs.base import ArchConfig
+from ..sharding import MeshContext, constrain
+from . import blocks, ssm
+from .common import (
+    ParamSpec,
+    abstract_params,
+    cross_entropy_loss,
+    init_params,
+    param_shardings,
+    rms_norm,
+    stack_specs,
+)
+
+LABEL_PAD = -1
+
+
+def layer_pattern(cfg: ArchConfig) -> tuple[str, ...]:
+    if cfg.layer_pattern:
+        return cfg.layer_pattern
+    if cfg.family == "ssm":
+        return ("ssm",)
+    return ("attn",)
+
+
+# ---------------------------------------------------------------------------
+# per-layer specs / apply / cache
+# ---------------------------------------------------------------------------
+
+def _mixer_specs(kind: str, cfg: ArchConfig) -> dict:
+    if kind in ("attn", "local_attn"):
+        return blocks.mla_specs(cfg) if cfg.attention == "mla" else blocks.gqa_specs(cfg)
+    if kind == "rglru":
+        return ssm.rglru_specs(cfg)
+    if kind == "ssm":
+        return ssm.mamba2_specs(cfg)
+    raise ValueError(kind)
+
+
+def _layer_specs(kind: str, cfg: ArchConfig, *, moe: bool) -> dict:
+    d = cfg.d_model
+    specs = {
+        "norm1": ParamSpec((d,), (None,), init="zeros"),
+        "mixer": _mixer_specs(kind, cfg),
+    }
+    if kind != "ssm":  # mamba blocks have no separate FFN
+        specs["norm2"] = ParamSpec((d,), (None,), init="zeros")
+        specs["ffn"] = blocks.moe_specs(cfg) if moe else blocks.mlp_specs(cfg)
+    return specs
+
+
+def _apply_mixer(kind, p, x, cfg, ctx):
+    if kind == "attn":
+        if cfg.attention == "mla":
+            return blocks.mla_attention(p, x, cfg, ctx)
+        return blocks.gqa_attention(p, x, cfg, ctx)
+    if kind == "local_attn":
+        return blocks.gqa_attention(p, x, cfg, ctx, window=cfg.window)
+    if kind == "rglru":
+        return ssm.rglru_block(p, x, cfg, ctx)
+    if kind == "ssm":
+        return ssm.mamba2_block(p, x, cfg, ctx)
+    raise ValueError(kind)
+
+
+def _apply_layer(kind, p, x, cfg, ctx, *, moe: bool):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    x = x + _apply_mixer(kind, p["mixer"], h, cfg, ctx)
+    if kind != "ssm":
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        ffn = blocks.moe_block if moe else blocks.mlp
+        x = x + ffn(p["ffn"], h, cfg, ctx)
+    return x
+
+
+def _mixer_decode(kind, p, x, cache, pos, cfg, ctx):
+    if kind == "attn":
+        if cfg.attention == "mla":
+            return blocks.mla_decode(p, x, cache, pos, cfg, ctx)
+        return blocks.gqa_decode(p, x, cache, pos, cfg, ctx)
+    if kind == "local_attn":
+        return blocks.gqa_decode(p, x, cache, pos, cfg, ctx, window=cfg.window)
+    if kind == "rglru":
+        return ssm.rglru_decode(p, x, cache, pos, cfg, ctx)
+    if kind == "ssm":
+        return ssm.mamba2_decode(p, x, cache, pos, cfg, ctx)
+    raise ValueError(kind)
+
+
+def _apply_layer_decode(kind, p, x, cache, pos, cfg, ctx, *, moe: bool):
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    mixed, cache = _mixer_decode(kind, p["mixer"], h, cache, pos, cfg, ctx)
+    x = x + mixed
+    if kind != "ssm":
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        ffn = blocks.moe_block if moe else blocks.mlp
+        x = x + ffn(p["ffn"], h, cfg, ctx)
+    return x, cache
+
+
+def _mixer_cache(kind, cfg: ArchConfig, batch: int, max_len: int, dtype):
+    if kind == "attn":
+        if cfg.attention == "mla":
+            return blocks.mla_init_cache(cfg, batch, max_len, dtype)
+        return blocks.gqa_init_cache(cfg, batch, max_len, dtype)
+    if kind == "local_attn":
+        return blocks.gqa_init_cache(cfg, batch, min(cfg.window, max_len), dtype)
+    if kind == "rglru":
+        return ssm.rglru_init_cache(cfg, batch, dtype)
+    if kind == "ssm":
+        return ssm.mamba2_init_cache(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# model specs / init
+# ---------------------------------------------------------------------------
+
+def _layer_plan(cfg: ArchConfig):
+    """(prefix_kinds, pattern, groups, suffix_kinds): prefix layers are the
+    leading dense-FFN layers; suffix is the non-divisible remainder."""
+    pat = layer_pattern(cfg)
+    prefix = cfg.first_dense_layers
+    rest = cfg.num_layers - prefix
+    groups, rem = divmod(rest, len(pat))
+    return (pat[:1] * prefix, pat, groups, pat[:rem])
+
+
+def model_specs(cfg: ArchConfig) -> dict:
+    moe = cfg.num_experts > 0
+    prefix_kinds, pat, groups, suffix_kinds = _layer_plan(cfg)
+    specs: dict[str, Any] = {
+        # embedding table: vocab-sharded only — FSDP on the d dim would
+        # force an involuntary full remat around the token gather (SPMD)
+        "embed": ParamSpec((cfg.vocab_size, cfg.d_model), ("vocab", None)),
+        "final_norm": ParamSpec((cfg.d_model,), (None,), init="zeros"),
+        # lm_head: keep the contracted d dim unsharded; vocab over model
+        "lm_head": ParamSpec((cfg.d_model, cfg.vocab_size), (None, "vocab")),
+        "prefix": [
+            _layer_specs(k, cfg, moe=False) for k in prefix_kinds
+        ],
+        "blocks": {
+            f"s{i}": stack_specs(_layer_specs(k, cfg, moe=moe), groups)
+            for i, k in enumerate(pat)
+        } if groups else {},
+        "suffix": [
+            _layer_specs(k, cfg, moe=moe) for k in suffix_kinds
+        ],
+    }
+    return specs
+
+
+def init_model(cfg: ArchConfig, key, dtype=jnp.bfloat16):
+    return init_params(model_specs(cfg), key, dtype)
+
+
+def abstract_model(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return abstract_params(model_specs(cfg), dtype)
+
+
+def model_shardings(cfg: ArchConfig, ctx: MeshContext):
+    return param_shardings(model_specs(cfg), ctx)
+
+
+def count_params(cfg: ArchConfig) -> int:
+    import numpy as np
+
+    leaves = jax.tree_util.tree_leaves(
+        model_specs(cfg),
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+    return int(sum(np.prod(s.shape) for s in leaves))
+
+
+def count_active_params(cfg: ArchConfig) -> int:
+    """Active params per token (MoE: top_k + shared experts only)."""
+    if cfg.num_experts == 0:
+        return count_params(cfg)
+    total = count_params(cfg)
+    f = cfg.moe_d_ff or cfg.d_ff
+    per_expert = 3 * cfg.d_model * f
+    moe_layers = cfg.num_layers - cfg.first_dense_layers
+    inactive = moe_layers * (cfg.num_experts - cfg.top_k) * per_expert
+    return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+def forward(params, batch, cfg: ArchConfig, ctx: MeshContext, *,
+            remat_policy: str = "full", scan_unroll: int | bool = 1,
+            last_token_only: bool = False):
+    """Logits for a full sequence.  batch: {'tokens' (B,S)} or
+    {'embeds' (B,S,d)} for stub-frontend archs.
+
+    ``scan_unroll=True`` flattens the layer scan — used by the dry-run's
+    cost-extrapolation compiles (XLA cost_analysis counts a while body once,
+    so roofline terms are measured on shallow unrolled models and scaled)."""
+    if cfg.frontend != "none" and "embeds" in batch:
+        x = batch["embeds"]
+    else:
+        x = params["embed"][batch["tokens"]]
+    x = constrain(x.astype(params["lm_head"].dtype), ctx, ("batch", None, None))
+
+    moe = cfg.num_experts > 0
+    prefix_kinds, pat, groups, suffix_kinds = _layer_plan(cfg)
+
+    for p_layer, kind in zip(params["prefix"], prefix_kinds):
+        x = _apply_layer(kind, p_layer, x, cfg, ctx, moe=False)
+
+    if groups:
+        def body(x, group_params):
+            for i, kind in enumerate(pat):
+                x = _apply_layer(kind, group_params[f"s{i}"], x, cfg, ctx, moe=moe)
+            return x, None
+
+        if remat_policy == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        elif remat_policy == "dots":
+            body = jax.checkpoint(
+                body, prevent_cse=False,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            )
+        x, _ = lax.scan(body, x, params["blocks"], unroll=scan_unroll)
+
+    for p_layer, kind in zip(params["suffix"], suffix_kinds):
+        x = _apply_layer(kind, p_layer, x, cfg, ctx, moe=moe)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if last_token_only:
+        x = x[:, -1:, :]  # serving prefill: only the final position's logits
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return constrain(logits, ctx, ("batch", None, "act_model"))
+
+
+def loss_fn(params, batch, cfg: ArchConfig, ctx: MeshContext, *,
+            remat_policy: str = "full", scan_unroll: int | bool = 1):
+    logits = forward(params, batch, cfg, ctx, remat_policy=remat_policy,
+                     scan_unroll=scan_unroll)
+    labels = batch["labels"]
+    mask = labels != LABEL_PAD
+    return cross_entropy_loss(logits, jnp.maximum(labels, 0), mask)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    prefix_kinds, pat, groups, suffix_kinds = _layer_plan(cfg)
+    stack = lambda tree, n: jax.tree_util.tree_map(  # noqa: E731
+        lambda x: jnp.broadcast_to(x[None], (n, *x.shape)), tree
+    )
+    return {
+        "prefix": [_mixer_cache(k, cfg, batch, max_len, dtype) for k in prefix_kinds],
+        "blocks": {
+            f"s{i}": stack(_mixer_cache(k, cfg, batch, max_len, dtype), groups)
+            for i, k in enumerate(pat)
+        } if groups else {},
+        "suffix": [_mixer_cache(k, cfg, batch, max_len, dtype) for k in suffix_kinds],
+    }
+
+
+def decode_step(params, cache, tokens, pos, cfg: ArchConfig, ctx: MeshContext,
+                *, scan_unroll: int | bool = 1):
+    """One decode step.  tokens (B, 1) int32; pos scalar int32.
+    Returns (logits (B, V), new cache)."""
+    x = params["embed"][tokens]
+    x = constrain(x.astype(params["lm_head"].dtype), ctx, ("batch", None, None))
+    moe = cfg.num_experts > 0
+    prefix_kinds, pat, groups, suffix_kinds = _layer_plan(cfg)
+
+    new_cache: dict[str, Any] = {"prefix": [], "blocks": {}, "suffix": []}
+    for p_layer, kind, c in zip(params["prefix"], prefix_kinds, cache["prefix"]):
+        x, c2 = _apply_layer_decode(kind, p_layer, x, c, pos, cfg, ctx, moe=False)
+        new_cache["prefix"].append(c2)
+
+    if groups:
+        def body(x, scanned):
+            group_params, group_cache = scanned
+            cs = {}
+            for i, kind in enumerate(pat):
+                x, cs[f"s{i}"] = _apply_layer_decode(
+                    kind, group_params[f"s{i}"], x, group_cache[f"s{i}"],
+                    pos, cfg, ctx, moe=moe,
+                )
+            return x, cs
+
+        x, scanned_cache = lax.scan(
+            body, x, (params["blocks"], cache["blocks"]), unroll=scan_unroll
+        )
+        new_cache["blocks"] = scanned_cache
+
+    for p_layer, kind, c in zip(params["suffix"], suffix_kinds, cache["suffix"]):
+        x, c2 = _apply_layer_decode(kind, p_layer, x, c, pos, cfg, ctx, moe=moe)
+        new_cache["suffix"].append(c2)
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+    return constrain(logits, ctx, ("batch", "act_model")), new_cache

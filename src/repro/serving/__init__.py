@@ -1,0 +1,4 @@
+"""Serving layer: batched LM generation (cached decode, optional fp8 KV)
+and FM-index query serving."""
+
+from .engine import FMQueryServer, GenerateResult, generate  # noqa: F401

@@ -1,0 +1,77 @@
+"""Serving engine: batched LM generation over the cached decode step, and
+the FM-index query server — the two production serve paths.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models import transformer as tf
+from ..sharding import MeshContext
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: np.ndarray       # (B, prompt+gen)
+    tokens_per_s: float
+
+
+def generate(
+    params,
+    cfg: ArchConfig,
+    ctx: MeshContext,
+    prompts: np.ndarray,     # (B, prompt_len) int32
+    max_new_tokens: int,
+    *,
+    dtype=jnp.float32,
+    cache_dtype=None,
+    sample: Callable | None = None,   # logits (B, V) -> token (B,)
+) -> GenerateResult:
+    """Greedy (or custom-sampled) batched generation with a donated cache."""
+    B, prompt_len = prompts.shape
+    total = prompt_len + max_new_tokens
+    step = jax.jit(
+        lambda p, c, t, pos: tf.decode_step(p, c, t, pos, cfg, ctx),
+        donate_argnums=(1,),
+    )
+    cache = tf.init_cache(cfg, B, total, cache_dtype or dtype)
+    out = np.zeros((B, total), np.int32)
+    out[:, :prompt_len] = prompts
+    tok = jnp.asarray(prompts[:, :1])
+    t0 = time.perf_counter()
+    for pos in range(total - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(pos))
+        if pos + 1 < prompt_len:
+            tok = jnp.asarray(prompts[:, pos + 1 : pos + 2])
+        else:
+            nxt = (
+                jnp.argmax(logits, axis=-1) if sample is None else sample(logits)
+            )
+            tok = nxt[:, None].astype(jnp.int32)
+            out[:, pos + 1] = np.asarray(tok)[:, 0]
+    dt = time.perf_counter() - t0
+    return GenerateResult(out, B * (total - 1) / dt)
+
+
+class FMQueryServer:
+    """Thin serving wrapper over a built SequenceIndex: PAD-pads raw
+    variable-length queries and returns exact-match counts."""
+
+    def __init__(self, index):
+        self.index = index
+
+    def count(self, queries: list[np.ndarray]) -> np.ndarray:
+        from ..core.fm_index import PAD
+
+        L = max(len(q) for q in queries)
+        pats = np.full((len(queries), L), PAD, np.int32)
+        for i, q in enumerate(queries):
+            pats[i, : len(q)] = q
+        return np.asarray(self.index.count(pats))

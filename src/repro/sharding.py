@@ -1,0 +1,108 @@
+"""Logical-axis sharding rules (MaxText-style) for params and activations.
+
+Every parameter is declared with logical axis names (models/common.ParamSpec);
+this module maps logical axes -> mesh axes with divisibility fallbacks, so one
+rule set serves every architecture and mesh.
+
+Mesh layouts (launch/mesh.py):
+    single pod : (data=16, model=16)            axes ("data", "model")
+    multi pod  : (pod=2, data=16, model=16)     axes ("pod", "data", "model")
+    index build: (parts=N,)                     axes ("parts",)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> preferred mesh axes (first that divides wins; None if none)
+TRAIN_RULES: dict[str, tuple[str, ...]] = {
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "inner": ("model",),          # SSM / RG-LRU channel dim
+    "fsdp": ("data",),            # ZeRO-3: shard weight d_model dims
+    "expert_ff": ("pod",),        # expert hidden dim: extra FSDP over pods
+    "q_lora": ("data",),
+    "kv_lora": ("data",),
+    "head_dim": (),
+    "state": (),
+    "conv": (),
+    "layers": (),                 # scan axis stays replicated
+    "batch": ("pod", "data"),
+    "seq": (),
+    "act_model": ("model",),      # activation head/mlp dims
+}
+
+# decode: FSDP off (weights must be resident), batch over (pod, data)
+DECODE_RULES = dict(TRAIN_RULES, fsdp=())
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshContext:
+    """Mesh + the axis-name vocabulary the model code uses."""
+
+    mesh: Mesh
+    rules: Mapping[str, tuple[str, ...]]
+
+    @property
+    def batch_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in self.rules.get("batch", ()) if a in self.mesh.shape)
+
+    @property
+    def model_axis(self) -> str | None:
+        return "model" if "model" in self.mesh.shape else None
+
+    def axis_size(self, names: Sequence[str]) -> int:
+        size = 1
+        for n in names:
+            size *= self.mesh.shape.get(n, 1)
+        return size
+
+    def spec_for(self, logical_axes: Sequence[str | None],
+                 dim_sizes: Sequence[int]) -> P:
+        """PartitionSpec for one array, with divisibility fallback: a logical
+        axis maps to its preferred mesh axes only if the dim divides evenly
+        and the mesh axis is not already taken by an earlier dim."""
+        used: set[str] = set()
+        parts = []
+        for ax, size in zip(logical_axes, dim_sizes):
+            choice: tuple[str, ...] | None = None
+            if ax is not None:
+                prefs = tuple(a for a in self.rules.get(ax, ()) if a in self.mesh.shape)
+                # try the full tuple first (e.g. batch -> (pod, data)), then
+                # single axes
+                candidates = [prefs] + [(a,) for a in prefs]
+                for cand in candidates:
+                    if not cand or any(a in used for a in cand):
+                        continue
+                    total = self.axis_size(cand)
+                    if total > 1 and size % total == 0:
+                        choice = cand
+                        break
+            if choice:
+                used.update(choice)
+                parts.append(choice if len(choice) > 1 else choice[0])
+            else:
+                parts.append(None)
+        return P(*parts)
+
+    def sharding_for(self, logical_axes, dim_sizes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec_for(logical_axes, dim_sizes))
+
+
+def constrain(x: jax.Array, ctx: MeshContext, logical_axes) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op off-mesh dims)."""
+    spec = ctx.spec_for(logical_axes, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def single_device_context(rules=TRAIN_RULES) -> MeshContext:
+    """1-device mesh with the production axis names (smoke tests)."""
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    return MeshContext(mesh, rules)

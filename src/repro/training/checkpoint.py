@@ -1,0 +1,155 @@
+"""Checkpointing: atomic, async, keep-k, elastic-restore.
+
+Layout (one directory per step, atomically renamed into place):
+
+    ckpt_dir/
+      step_000123/
+        arrays.npz          flattened pytree leaves by joined key path
+        meta.json           step, loader cursor, PRNG key, tree structure
+
+Design (DESIGN.md §7):
+  * atomic   — write to ``step_X.tmp`` then ``os.rename`` (POSIX atomic);
+               a crash mid-save never corrupts the latest checkpoint.
+  * async    — ``save_async`` snapshots to host (device_get) on the caller
+               thread (cheap, overlapped with the next step's compute on
+               real hardware) and does file IO on a background thread.
+  * keep-k   — old steps garbage-collected after a successful save.
+  * elastic  — arrays are saved UNSHARDED (host-gathered); ``restore``
+               device_puts onto whatever shardings the new mesh prescribes,
+               so a 512-chip checkpoint restores onto 256 chips unchanged.
+  * index build — the prefix-doubling loop state (ISA, h) checkpoints the
+               same way, making the paper's workload preemption-safe.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            arr = arr.astype(np.float32)  # npz-safe; restore recasts
+        flat[key] = arr
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def _unflatten(tree_like, flat: dict[str, np.ndarray]):
+    paths_and_leaves = jax.tree_util.tree_flatten_with_path(tree_like)
+    treedef = paths_and_leaves[1]
+    leaves = []
+    for path, _ in paths_and_leaves[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        leaves.append(flat[key])
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, tree, extra: dict[str, Any] | None = None):
+        """Synchronous atomic save."""
+        flat = _flatten(tree)
+        self._write(step, flat, extra or {})
+
+    def save_async(self, step: int, tree, extra: dict[str, Any] | None = None):
+        """Snapshot now (host copy), write in the background."""
+        self.wait()
+        flat = _flatten(tree)  # device_get = the snapshot barrier
+        self._thread = threading.Thread(
+            target=self._write, args=(step, flat, extra or {}), daemon=True
+        )
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _write(self, step: int, flat, extra):
+        name = f"step_{step:08d}"
+        tmp = os.path.join(self.dir, name + ".tmp")
+        final = os.path.join(self.dir, name)
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump({"step": step, **extra}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"))
+
+    # -- restore ------------------------------------------------------------
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                out.append(int(d[len("step_"):]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, tree_like, step: int | None = None, shardings=None):
+        """Restore into the structure of ``tree_like``.  With ``shardings``
+        (a matching pytree of NamedSharding), arrays are placed directly
+        onto the new mesh — elastic re-mesh is free because the on-disk
+        format is unsharded."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:08d}")
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            flat = {k: z[k] for k in z.files}
+        tree = _unflatten(tree_like, flat)
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        # recast to the reference dtypes (bf16 round-trips via f32 on disk)
+        tree = jax.tree_util.tree_map(
+            lambda x, ref: np.asarray(x).astype(ref.dtype), tree, tree_like
+        )
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), tree, shardings
+            )
+        else:
+            tree = jax.tree_util.tree_map(jax.numpy.asarray, tree)
+        return tree, meta

@@ -1,0 +1,322 @@
+"""Multi-device correctness driver, run in a SUBPROCESS with forced host
+devices (so the main pytest process keeps the default single device).
+
+Usage: python tests/dist_driver.py <scenario> [devices]
+Exits 0 on success; prints failures and exits 1 otherwise.
+"""
+
+import os
+import sys
+
+DEVICES = int(sys.argv[2]) if len(sys.argv) > 2 else 8
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={DEVICES} "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import alphabet as al  # noqa: E402
+from repro.core.dist_sort import (  # noqa: E402
+    ShardInfo,
+    bitonic_sort_sharded,
+    exclusive_scan_sharded,
+    samplesort_sharded,
+    scatter_to_index_bitonic,
+    scatter_to_index_samplesort,
+    shift_sharded,
+)
+from repro.core.dist_suffix_array import (  # noqa: E402
+    BITONIC,
+    SAMPLESORT,
+    DistSAConfig,
+    build_bwt_sharded,
+    build_isa_sharded,
+)
+from repro.core.suffix_array import suffix_array_naive  # noqa: E402
+from repro.core.bwt import bwt_naive  # noqa: E402
+
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+AXIS = "parts"
+
+
+def make_mesh():
+    return jax.make_mesh((DEVICES,), (AXIS,))
+
+
+def shard_call(mesh, fn, *arrays, out_specs=P(AXIS)):
+    return jax.jit(
+        jax.shard_map(
+            fn, mesh=mesh, in_specs=tuple(P(AXIS) for _ in arrays),
+            out_specs=out_specs,
+        )
+    )(*arrays)
+
+
+def scenario_bitonic_sort():
+    mesh = make_mesh()
+    rng = np.random.default_rng(0)
+    for trial in range(5):
+        n = DEVICES * int(rng.integers(4, 40))
+        info = ShardInfo(AXIS, DEVICES, n // DEVICES)
+        k1 = rng.integers(0, 10, n).astype(np.int32)
+        k2 = rng.integers(-1, 10, n).astype(np.int32)
+        pay = np.arange(n, dtype=np.int32)
+
+        def f(a, b, c):
+            return bitonic_sort_sharded(info, (a, b, c), num_keys=2)
+
+        r1, r2, rp = shard_call(
+            mesh, f, jnp.asarray(k1), jnp.asarray(k2), jnp.asarray(pay),
+            out_specs=(P(AXIS),) * 3,
+        )
+        order = np.lexsort((pay, k2, k1))
+        assert np.array_equal(np.asarray(r1), k1[order]), "keys1 mismatch"
+        assert np.array_equal(np.asarray(r2), k2[order]), "keys2 mismatch"
+        # payload: equal keys may permute payloads; verify (k1,k2,pay) multiset
+        got = sorted(zip(np.asarray(r1), np.asarray(r2), np.asarray(rp)))
+        want = sorted(zip(k1, k2, pay))
+        assert got == want, "payload multiset mismatch"
+    print("bitonic sort ok")
+
+
+def scenario_shift():
+    mesh = make_mesh()
+    rng = np.random.default_rng(1)
+    n = DEVICES * 16
+    info = ShardInfo(AXIS, DEVICES, n // DEVICES)
+    x = rng.integers(0, 100, n).astype(np.int32)
+    for h in [1, 2, 3, 15, 16, 17, 64, n - 1]:
+        def f(a):
+            return shift_sharded(info, a, h, -1)
+
+        out = np.asarray(shard_call(mesh, f, jnp.asarray(x)))
+        want = np.full(n, -1, np.int32)
+        want[: n - h] = x[h:]
+        assert np.array_equal(out, want), f"shift h={h}"
+    print("shift ok")
+
+
+def scenario_scan():
+    mesh = make_mesh()
+    rng = np.random.default_rng(2)
+    info = ShardInfo(AXIS, DEVICES, 1)
+    v = rng.integers(0, 50, DEVICES).astype(np.int32)
+
+    def f(a):
+        return exclusive_scan_sharded(info, a[0])[None]
+
+    out = np.asarray(shard_call(mesh, f, jnp.asarray(v)))
+    want = np.cumsum(v) - v
+    assert np.array_equal(out, want), (out, want)
+    print("scan ok")
+
+
+def scenario_samplesort():
+    mesh = make_mesh()
+    rng = np.random.default_rng(3)
+    for trial in range(5):
+        n = DEVICES * int(rng.integers(8, 40))
+        info = ShardInfo(AXIS, DEVICES, n // DEVICES)
+        k1 = rng.integers(0, 8, n).astype(np.int32)  # heavy ties
+        k2 = rng.integers(-1, 8, n).astype(np.int32)
+        pay = np.arange(n, dtype=np.int32)
+
+        def f(a, b, c):
+            res = samplesort_sharded(info, (a, b, c), num_keys=2,
+                                     capacity_factor=4.0)
+            return res.operands + (res.n_valid[None], res.overflow[None])
+
+        *ops, nv, ov = shard_call(
+            mesh, f, jnp.asarray(k1), jnp.asarray(k2), jnp.asarray(pay),
+            out_specs=(P(AXIS),) * 3 + (P(AXIS), P(AXIS)),
+        )
+        assert not np.any(np.asarray(ov)), "unexpected overflow"
+        nv = np.asarray(nv)
+        slots = np.asarray(ops[0]).shape[0] // DEVICES
+        got = []
+        for d in range(DEVICES):
+            lo, hi = d * slots, d * slots + nv[d]
+            got += list(zip(*(np.asarray(o)[lo:hi] for o in ops)))
+        assert len(got) == n, f"lost elements {len(got)} != {n}"
+        want_order = np.lexsort((pay, k2, k1))
+        want_keys = list(zip(k1[want_order], k2[want_order]))
+        got_keys = [(a, b) for a, b, _ in got]
+        assert got_keys == want_keys, "samplesort key order mismatch"
+        assert sorted(p for _, _, p in got) == list(range(n)), "payload lost"
+    print("samplesort ok")
+
+
+def scenario_scatter():
+    mesh = make_mesh()
+    rng = np.random.default_rng(4)
+    n = DEVICES * 32
+    info = ShardInfo(AXIS, DEVICES, n // DEVICES)
+    perm = rng.permutation(n).astype(np.int32)
+    vals = rng.integers(0, 1000, n).astype(np.int32)
+
+    def f_b(i, v):
+        return scatter_to_index_bitonic(info, i, (v,))[0]
+
+    out = np.asarray(shard_call(mesh, f_b, jnp.asarray(perm), jnp.asarray(vals)))
+    want = np.zeros(n, np.int32)
+    want[perm] = vals
+    assert np.array_equal(out, want), "bitonic scatter"
+
+    def f_s(i, v):
+        (o,), ov = scatter_to_index_samplesort(
+            info, i, (v,), valid=jnp.ones_like(i, dtype=bool),
+            capacity_factor=4.0,
+        )
+        return o, ov[None]
+
+    out, ov = shard_call(mesh, f_s, jnp.asarray(perm), jnp.asarray(vals),
+                         out_specs=(P(AXIS), P(AXIS)))
+    assert not np.any(np.asarray(ov)), "scatter overflow"
+    assert np.array_equal(np.asarray(out), want), "samplesort scatter"
+    print("scatter ok")
+
+
+def _check_sa(engine, seed, n_mult):
+    mesh = make_mesh()
+    rng = np.random.default_rng(seed)
+    n = DEVICES * n_mult
+    toks = rng.integers(1, 5, n - 1).astype(np.int32)
+    s = al.append_sentinel(toks)
+    sigma = al.sigma_of(s)
+    cfg = DistSAConfig(axis=AXIS, engine=engine, capacity_factor=4.0)
+    sa, bwt_arr, row = build_bwt_sharded(jnp.asarray(s), mesh, cfg, sigma=sigma)
+    sa = np.asarray(sa)
+    want_sa = suffix_array_naive(s)
+    assert np.array_equal(sa, want_sa), f"{engine} SA mismatch n={n}"
+    want_bwt, want_row = bwt_naive(s)
+    assert np.array_equal(np.asarray(bwt_arr), want_bwt), f"{engine} BWT"
+    assert int(row) == want_row, f"{engine} row"
+
+
+def scenario_sa_bitonic():
+    for seed, mult in [(0, 2), (1, 8), (2, 17), (3, 64)]:
+        _check_sa(BITONIC, seed, mult)
+    print("distributed SA/BWT (bitonic) ok")
+
+
+def scenario_sa_samplesort():
+    for seed, mult in [(0, 8), (1, 17), (2, 64)]:
+        _check_sa(SAMPLESORT, seed, mult)
+    print("distributed SA/BWT (samplesort) ok")
+
+
+def scenario_dist_fm():
+    from repro.core.dist_fm import build_dist_fm_index, dist_count
+    from repro.core.fm_index import PAD, count_naive
+
+    mesh = make_mesh()
+    rng = np.random.default_rng(7)
+    r = 4
+    n = DEVICES * 8 * r
+    toks = rng.integers(1, 5, n - 1).astype(np.int32)
+    s = al.append_sentinel(toks)
+    sigma = al.sigma_of(s)
+    cfg = DistSAConfig(axis=AXIS, engine=BITONIC)
+    _sa, bwt_arr, row = build_bwt_sharded(jnp.asarray(s), mesh, cfg, sigma=sigma)
+    idx = build_dist_fm_index(bwt_arr, row, mesh, sigma=sigma, sample_rate=r)
+    L = 6
+    B = 16
+    pats = np.full((B, L), PAD, np.int32)
+    lens = rng.integers(1, L + 1, B)
+    for b in range(B):
+        pats[b, : lens[b]] = rng.integers(1, 5, lens[b])
+    got = np.asarray(dist_count(idx, jnp.asarray(pats), mesh))
+    want = np.array([count_naive(s, pats[b, : lens[b]]) for b in range(B)])
+    assert np.array_equal(got, want), (got, want)
+    print("dist FM ok")
+
+
+def scenario_pipeline():
+    from repro.core.pipeline import build_index
+    from repro.core.fm_index import PAD, count_naive
+
+    mesh = make_mesh()
+    rng = np.random.default_rng(11)
+    for engine in (BITONIC, SAMPLESORT):
+        n = 777  # deliberately not divisible by anything
+        toks = rng.integers(1, 6, n).astype(np.int32)
+        idx = build_index(
+            toks, mesh, sample_rate=8,
+            sa_config=DistSAConfig(axis=AXIS, engine=engine, capacity_factor=3.0),
+        )
+        B, L = 8, 5
+        pats = np.full((B, L), PAD, np.int32)
+        lens = rng.integers(1, L + 1, B)
+        for b in range(B):
+            pats[b, : lens[b]] = rng.integers(1, 6, lens[b])
+        got = np.asarray(idx.count(pats))
+        s = al.append_sentinel(toks)
+        want = np.array([count_naive(s, pats[b, : lens[b]]) for b in range(B)])
+        assert np.array_equal(got, want), (engine, got, want)
+    print("pipeline ok")
+
+
+def scenario_elastic():
+    """Elastic re-mesh (DESIGN.md §7): a checkpoint written from an
+    8-shard mesh restores byte-identically onto a 4-shard mesh (the
+    on-disk format is unsharded; shardings are reapplied on restore)."""
+    import tempfile
+    from jax.sharding import NamedSharding
+    from repro.training.checkpoint import Checkpointer
+
+    assert DEVICES >= 8
+    rng = np.random.default_rng(0)
+    state = {
+        "w": rng.normal(size=(64, 32)).astype(np.float32),
+        "m": rng.normal(size=(64, 32)).astype(np.float32),
+    }
+
+    mesh8 = jax.make_mesh((8,), (AXIS,), devices=jax.devices()[:8])
+    sh8 = NamedSharding(mesh8, P(AXIS, None))
+    tree8 = {k: jax.device_put(jnp.asarray(v), sh8) for k, v in state.items()}
+
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d)
+        ck.save(5, tree8, extra={"mesh": "8"})
+
+        # "lose half the pod": restore onto a 4-device mesh
+        mesh4 = jax.make_mesh((4,), (AXIS,), devices=jax.devices()[:4])
+        sh4 = NamedSharding(mesh4, P(AXIS, None))
+        tmpl = {k: jnp.zeros_like(jnp.asarray(v)) for k, v in state.items()}
+        restored, meta = ck.restore(
+            tmpl, shardings={k: sh4 for k in state}
+        )
+        assert meta["step"] == 5 and meta["mesh"] == "8"
+        for k in state:
+            assert restored[k].sharding.num_devices == 4
+            assert np.array_equal(np.asarray(restored[k]), state[k]), k
+    print("elastic re-mesh ok")
+
+
+SCENARIOS = {
+    "pipeline": scenario_pipeline,
+    "elastic": scenario_elastic,
+    "bitonic_sort": scenario_bitonic_sort,
+    "shift": scenario_shift,
+    "scan": scenario_scan,
+    "samplesort": scenario_samplesort,
+    "scatter": scenario_scatter,
+    "sa_bitonic": scenario_sa_bitonic,
+    "sa_samplesort": scenario_sa_samplesort,
+    "dist_fm": scenario_dist_fm,
+}
+
+if __name__ == "__main__":
+    name = sys.argv[1]
+    if name == "all":
+        for k, fn in SCENARIOS.items():
+            fn()
+    else:
+        SCENARIOS[name]()
+    print("OK", name)

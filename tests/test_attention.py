@@ -1,0 +1,128 @@
+"""Chunked (flash-style) attention vs the naive oracle, fp8 KV-cache decode,
+and the competitor algorithm — the §Perf-critical numerics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_reduced_config
+from repro.models import blocks
+from repro.sharding import single_device_context
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return single_device_context()
+
+
+class TestChunkedAttention:
+    @pytest.mark.parametrize("window", [0, 512, 2048])
+    def test_gqa_chunked_matches_naive(self, window):
+        rng = np.random.default_rng(0)
+        B, S, H, Hkv, hd = 2, 2048, 4, 2, 16
+        q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(B, S, Hkv, hd)), jnp.float32)
+        naive = blocks._attend(q, k, v, blocks._causal_mask(S, S, window=window))
+        chunked = blocks._attend_chunked(q, k, v, window=window)
+        np.testing.assert_allclose(
+            np.asarray(naive, np.float32), np.asarray(chunked, np.float32),
+            rtol=1e-4, atol=1e-4,
+        )
+
+    def test_mla_chunked_matches_naive(self, ctx):
+        cfg = get_reduced_config("minicpm3_4b")
+        from repro.models.transformer import init_model
+
+        params = init_model(cfg, jax.random.key(0), jnp.float32)
+        # pull one MLA layer's params out of the stacked blocks
+        p = jax.tree_util.tree_map(
+            lambda x: x[0], params["blocks"]["s0"]["mixer"]
+        )
+        rng = np.random.default_rng(1)
+        B, S = 1, 2048
+        x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)) * 0.1, jnp.float32)
+        from repro.models.common import apply_rope
+
+        q_nope, q_rope = blocks._mla_q(p, x, cfg)
+        positions = jnp.arange(S, dtype=jnp.int32)[None, :]
+        q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+        ckv, k_rope = blocks._mla_kv_latent(p, x, cfg)
+        k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+        naive = blocks._mla_attend(
+            p, q_nope, q_rope, ckv, k_rope, cfg, blocks._causal_mask(S, S)
+        )
+        chunked = blocks._mla_attend_chunked(p, q_nope, q_rope, ckv, k_rope, cfg)
+        np.testing.assert_allclose(
+            np.asarray(naive, np.float32), np.asarray(chunked, np.float32),
+            rtol=2e-3, atol=2e-3,
+        )
+
+
+class TestFp8KVCache:
+    @pytest.mark.parametrize("arch", ["qwen2p5_3b", "minicpm3_4b"])
+    def test_decode_with_fp8_cache_close_to_bf16(self, arch, ctx):
+        from repro.models import transformer as tf
+
+        cfg = get_reduced_config(arch)
+        params = tf.init_model(cfg, jax.random.key(2), jnp.float32)
+        rng = np.random.default_rng(2)
+        toks = rng.integers(0, cfg.vocab_size, (1, 6)).astype(np.int32)
+
+        outs = {}
+        for dt in (jnp.float32, jnp.float8_e4m3fn):
+            cache = tf.init_cache(cfg, 1, 8, dt)
+            logits_seq = []
+            for pos in range(6):
+                logits, cache = tf.decode_step(
+                    params, cache, jnp.asarray(toks[:, pos : pos + 1]),
+                    jnp.int32(pos), cfg, ctx,
+                )
+                logits_seq.append(np.asarray(logits, np.float32))
+            outs[str(dt)] = np.stack(logits_seq)
+        a, b = outs.values()
+        assert np.isfinite(b).all()
+        # fp8 quantisation error stays small relative to logit scale
+        denom = np.maximum(np.abs(a).max(), 1e-6)
+        assert np.abs(a - b).max() / denom < 0.15
+
+
+class TestCompetitor:
+    """Menon et al. ranged direct-comparison construction (the paper's
+    Table 2 baseline) must be exactly correct too."""
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_matches_naive(self, seed):
+        from repro.core import alphabet as al
+        from repro.core.competitor import suffix_array_rpgi
+        from repro.core.suffix_array import suffix_array_naive
+
+        rng = np.random.default_rng(seed)
+        s = al.append_sentinel(
+            rng.integers(1, rng.integers(2, 7), rng.integers(2, 120))
+            .astype(np.int32)
+        )
+        got = np.asarray(suffix_array_rpgi(jnp.asarray(s)))
+        assert np.array_equal(got, suffix_array_naive(s))
+
+    def test_repetitive_worst_case(self):
+        from repro.core import alphabet as al
+        from repro.core.competitor import suffix_array_rpgi
+        from repro.core.suffix_array import suffix_array_naive
+
+        s = al.append_sentinel(np.tile([1, 1, 2], 80).astype(np.int32))
+        got = np.asarray(suffix_array_rpgi(jnp.asarray(s)))
+        assert np.array_equal(got, suffix_array_naive(s))
+
+    def test_agrees_with_ours(self):
+        from repro.core import alphabet as al
+        from repro.core.competitor import bwt_rpgi
+        from repro.core.bwt import bwt
+
+        rng = np.random.default_rng(9)
+        s = al.append_sentinel(rng.integers(1, 5, 200).astype(np.int32))
+        b1, r1 = bwt(jnp.asarray(s), al.sigma_of(s))
+        b2, r2 = bwt_rpgi(jnp.asarray(s))
+        assert np.array_equal(np.asarray(b1), np.asarray(b2))
+        assert int(r1) == int(r2)

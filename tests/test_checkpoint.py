@@ -1,0 +1,130 @@
+"""Fault-tolerance tests: atomic checkpointing, bitwise resume, keep-k GC,
+async save, and elastic restore metadata."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_reduced_config
+from repro.data.corpus import corpus
+from repro.data.loader import LoaderConfig, TokenLoader
+from repro.sharding import single_device_context
+from repro.training.checkpoint import Checkpointer
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_loop import TrainConfig, train
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return single_device_context()
+
+
+class TestCheckpointer:
+    def test_roundtrip(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        tree = {"a": jnp.arange(10, dtype=jnp.float32),
+                "b": {"c": jnp.ones((3, 4), jnp.bfloat16)}}
+        ck.save(7, tree, extra={"cursor": 42})
+        restored, meta = ck.restore(tree)
+        assert meta["step"] == 7 and meta["cursor"] == 42
+        assert np.array_equal(np.asarray(restored["a"]), np.arange(10))
+        assert restored["b"]["c"].dtype == jnp.bfloat16
+
+    def test_keep_k_gc(self, tmp_path):
+        ck = Checkpointer(str(tmp_path), keep=2)
+        tree = {"x": jnp.zeros(4)}
+        for s in (1, 2, 3, 4):
+            ck.save(s, tree)
+        assert ck.all_steps() == [3, 4]
+
+    def test_async_save(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        tree = {"x": jnp.arange(100.0)}
+        ck.save_async(3, tree)
+        ck.wait()
+        restored, meta = ck.restore(tree)
+        assert meta["step"] == 3
+        assert np.array_equal(np.asarray(restored["x"]), np.arange(100.0))
+
+    def test_atomic_no_partial_dirs(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        ck.save(1, {"x": jnp.zeros(2)})
+        entries = os.listdir(tmp_path)
+        assert entries == ["step_00000001"]  # no .tmp left behind
+
+    def test_latest_of_empty(self, tmp_path):
+        ck = Checkpointer(str(tmp_path))
+        assert ck.latest_step() is None
+
+
+class TestResume:
+    def test_bitwise_resume(self, ctx, tmp_path):
+        """Kill training at step 6, restart from the checkpoint, verify the
+        loss trajectory is exactly the uninterrupted run's."""
+        cfg = get_reduced_config("qwen2p5_3b").replace(vocab_size=128)
+        toks = corpus("english", 8000) % 128
+        loader = TokenLoader(toks, LoaderConfig(2, 16, seed=3))
+        tcfg = TrainConfig(
+            opt=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=12),
+            checkpoint_every=3, log_every=0,
+        )
+
+        full = train(cfg, ctx, tcfg, loader, 12, ckpt_dir=str(tmp_path / "a"),
+                     seed=7, log=lambda *_: None)
+
+        # interrupted run: first 6 steps, then resume to 12
+        train(cfg, ctx, tcfg, loader, 6, ckpt_dir=str(tmp_path / "b"),
+              seed=7, log=lambda *_: None)
+        resumed = train(cfg, ctx, tcfg, loader, 12,
+                        ckpt_dir=str(tmp_path / "b"), resume=True, seed=7,
+                        log=lambda *_: None)
+
+        np.testing.assert_array_equal(
+            np.array(full["losses"][6:]), np.array(resumed["losses"])
+        )
+
+    def test_index_build_state_checkpoint(self, tmp_path):
+        """The prefix-doubling loop state checkpoints and resumes (the
+        paper's Spark lineage -> explicit state, DESIGN.md §7)."""
+        from repro.core import alphabet as al
+        from repro.core.suffix_array import (
+            initial_ranks, rerank_from_sorted, shifted_ranks,
+        )
+        from jax import lax
+
+        rng = np.random.default_rng(0)
+        s = al.append_sentinel(rng.integers(1, 5, 63).astype(np.int32))
+        sigma = al.sigma_of(s)
+        sd = jnp.asarray(s)
+        n = len(s)
+        idx = jnp.arange(n, dtype=jnp.int32)
+
+        def one_round(rank, h):
+            r2 = shifted_ranks(rank, jnp.int32(h))
+            r1s, r2s, perm = lax.sort((rank, r2, idx), num_keys=2)
+            new_sorted, _ = rerank_from_sorted(r1s, r2s)
+            return jnp.zeros_like(rank).at[perm].set(new_sorted)
+
+        # run 3 rounds, checkpoint, restore, run to completion
+        rank = initial_ranks(sd, sigma)
+        h = 1
+        for _ in range(3):
+            rank = one_round(rank, h)
+            h *= 2
+        ck = Checkpointer(str(tmp_path))
+        ck.save(3, {"rank": rank}, extra={"h": h})
+        restored, meta = ck.restore({"rank": rank})
+        rank2, h2 = restored["rank"], meta["h"]
+        while h2 < n:
+            rank2 = one_round(rank2, h2)
+            h2 *= 2
+        # reference: uninterrupted
+        rank_ref = initial_ranks(sd, sigma)
+        h = 1
+        while h < n:
+            rank_ref = one_round(rank_ref, h)
+            h *= 2
+        assert np.array_equal(np.asarray(rank2), np.asarray(rank_ref))

@@ -1,0 +1,53 @@
+"""Multi-device correctness, via subprocesses with forced host devices
+(the main pytest process keeps the default single device — dry-run flags
+must never leak into smoke tests/benches)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+DRIVER = os.path.join(os.path.dirname(__file__), "dist_driver.py")
+
+SCENARIOS = [
+    "bitonic_sort",
+    "shift",
+    "scan",
+    "samplesort",
+    "scatter",
+    "sa_bitonic",
+    "sa_samplesort",
+    "dist_fm",
+    "pipeline",
+    "elastic",
+]
+
+
+def _run(scenario: str, devices: int = 8, timeout: int = 900):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, DRIVER, scenario, str(devices)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert proc.returncode == 0, (
+        f"{scenario} failed:\nSTDOUT:{proc.stdout[-3000:]}\n"
+        f"STDERR:{proc.stderr[-3000:]}"
+    )
+
+
+@pytest.mark.parametrize("scenario", SCENARIOS)
+def test_distributed_scenario(scenario):
+    _run(scenario)
+
+
+def test_nonpow2_device_count_samplesort():
+    """Sample sort has no power-of-two requirement (bitonic does)."""
+    _run("samplesort", devices=6)
+
+
+def test_main_process_sees_one_device():
+    import jax
+
+    assert len(jax.devices()) == 1

@@ -1,0 +1,94 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alphabet as al
+from repro.core.bwt import bwt, inverse_bwt
+from repro.core.fm_index import PAD, build_fm_index, count, count_naive
+from repro.core.suffix_array import (
+    isa_prefix_doubling,
+    sa_from_isa,
+    suffix_array,
+    suffix_array_naive,
+)
+
+tokens_strategy = st.lists(
+    st.integers(min_value=1, max_value=6), min_size=1, max_size=80
+)
+
+
+def _prep(toks):
+    s = al.append_sentinel(np.array(toks, dtype=np.int32))
+    return s, al.sigma_of(s)
+
+
+@settings(max_examples=40, deadline=None)
+@given(tokens_strategy)
+def test_sa_is_permutation_and_sorted(toks):
+    """SA is a permutation of [0, n) and orders suffixes lexicographically."""
+    s, sigma = _prep(toks)
+    sa = np.asarray(suffix_array(jnp.asarray(s), sigma))
+    n = len(s)
+    assert sorted(sa.tolist()) == list(range(n))
+    suffixes = [s[i:].tolist() for i in sa]
+    assert suffixes == sorted(suffixes)
+
+
+@settings(max_examples=30, deadline=None)
+@given(tokens_strategy)
+def test_sa_matches_naive(toks):
+    s, sigma = _prep(toks)
+    sa = np.asarray(suffix_array(jnp.asarray(s), sigma))
+    assert np.array_equal(sa, suffix_array_naive(s))
+
+
+@settings(max_examples=30, deadline=None)
+@given(tokens_strategy)
+def test_isa_sa_inverse(toks):
+    s, sigma = _prep(toks)
+    isa = isa_prefix_doubling(jnp.asarray(s), sigma)
+    sa = sa_from_isa(isa)
+    n = len(s)
+    assert np.array_equal(np.asarray(sa)[np.asarray(isa)], np.arange(n))
+
+
+@settings(max_examples=30, deadline=None)
+@given(tokens_strategy)
+def test_bwt_roundtrip(toks):
+    """bwt is a permutation of the text and inverts exactly (paper §2.1)."""
+    s, sigma = _prep(toks)
+    b, row = bwt(jnp.asarray(s), sigma)
+    assert sorted(np.asarray(b).tolist()) == sorted(s.tolist())
+    rec = inverse_bwt(b, row, sigma)
+    assert np.array_equal(np.asarray(rec), s)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    tokens_strategy,
+    st.lists(st.integers(min_value=1, max_value=6), min_size=1, max_size=5),
+)
+def test_fm_count_matches_substring_count(toks, pattern):
+    s, sigma = _prep(toks)
+    b, row = bwt(jnp.asarray(s), sigma)
+    fm = build_fm_index(b, row, sigma, sample_rate=4)
+    pat = np.array(pattern, dtype=np.int32)
+    pp = np.full((1, 8), PAD, np.int32)
+    pp[0, : len(pat)] = pat
+    got = int(count(fm, jnp.asarray(pp))[0])
+    assert got == count_naive(s, pat)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=3), min_size=2, max_size=40))
+def test_occurrences_sum_to_text_length(toks):
+    """Σ_c count(c as 1-gram) == n - 1 (every non-sentinel position)."""
+    s, sigma = _prep(toks)
+    b, row = bwt(jnp.asarray(s), sigma)
+    fm = build_fm_index(b, row, sigma, sample_rate=4)
+    pats = np.full((sigma - 1, 1), PAD, np.int32)
+    pats[:, 0] = np.arange(1, sigma)
+    total = int(np.asarray(count(fm, jnp.asarray(pats))).sum())
+    assert total == len(s) - 1

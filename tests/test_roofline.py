@@ -1,0 +1,85 @@
+"""Roofline machinery unit tests: the HLO collective-bytes parser against
+hand-written HLO snippets, and term arithmetic."""
+
+import numpy as np
+
+from repro.launch.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    _shape_bytes,
+    collective_bytes,
+)
+
+# operand types appear inline in XLA HLO text (as compiled.as_text() prints)
+HLO_SNIPPET = """
+HloModule test
+ENTRY %main {
+  %p0 = bf16[16,4096,128]{2,1,0} parameter(0)
+  %ag = bf16[16,4096,2048]{2,1,0} all-gather(bf16[16,4096,128]{2,1,0} %p0), dimensions={2}
+  %ar = f32[1024,1024]{1,0} all-reduce(f32[1024,1024]{1,0} %x), to_apply=%add
+  %rs = f32[64,1024]{1,0} reduce-scatter(f32[1024,1024]{1,0} %y), dimensions={0}
+  %a2a = s32[4096]{0} all-to-all(s32[4096]{0} %z)
+  %cp = bf16[512,512]{1,0} collective-permute(bf16[512,512]{1,0} %w), source_target_pairs={{0,1}}
+  %dot = f32[128,128]{1,0} dot(f32[128,64]{1,0} %a, f32[64,128]{1,0} %b)
+}
+"""
+
+
+class TestShapeBytes:
+    def test_simple(self):
+        assert _shape_bytes("bf16[16,4096,128]") == 16 * 4096 * 128 * 2
+        assert _shape_bytes("f32[1024,1024]") == 1024 * 1024 * 4
+        assert _shape_bytes("s32[4096]") == 4096 * 4
+
+    def test_tuple(self):
+        t = "(f32[8,8]{1,0}, s32[8]{0})"
+        assert _shape_bytes(t) == 8 * 8 * 4 + 8 * 4
+
+    def test_scalar_and_unknown(self):
+        assert _shape_bytes("f32[]") == 4
+        assert _shape_bytes("token[]") == 0
+
+
+class TestCollectiveParser:
+    def test_counts_and_bytes(self):
+        stats = collective_bytes(HLO_SNIPPET)
+        assert stats.counts == {
+            "all-gather": 1, "all-reduce": 1, "reduce-scatter": 1,
+            "all-to-all": 1, "collective-permute": 1,
+        }
+        ag_out = 16 * 4096 * 2048 * 2
+        ag_in = 16 * 4096 * 128 * 2
+        assert stats.bytes_by_op["all-gather"] == ag_out - ag_in
+        assert stats.bytes_by_op["all-reduce"] == 2 * 1024 * 1024 * 4
+        assert stats.bytes_by_op["reduce-scatter"] == (1024 - 64) * 1024 * 4
+        assert stats.bytes_by_op["all-to-all"] == 4096 * 4
+        assert stats.bytes_by_op["collective-permute"] == 512 * 512 * 2
+
+    def test_ignores_non_collectives(self):
+        stats = collective_bytes("%d = f32[128,128]{1,0} dot(%a, %b)")
+        assert stats.total_bytes == 0
+        assert stats.counts == {}
+
+
+class TestRooflineTerms:
+    def test_bottleneck_selection(self):
+        r = Roofline(
+            flops_per_device=PEAK_FLOPS,        # 1s compute
+            bytes_per_device=HBM_BW / 2,        # 0.5s memory
+            collective_bytes_per_device=ICI_BW * 2,  # 2s collective
+            collective_detail={}, chips=256,
+        )
+        assert np.isclose(r.compute_s, 1.0)
+        assert np.isclose(r.memory_s, 0.5)
+        assert np.isclose(r.collective_s, 2.0)
+        assert r.bottleneck == "collective"
+        assert np.isclose(r.step_time_s, 2.0)
+
+    def test_to_dict_roundtrip(self):
+        r = Roofline(1.0, 2.0, 3.0, {"counts": {}}, 4)
+        d = r.to_dict()
+        assert d["chips"] == 4 and d["bottleneck"] in (
+            "compute", "memory", "collective"
+        )
