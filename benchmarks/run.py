@@ -42,7 +42,7 @@ def main() -> None:
 
     table2_bwt.main()
     sort_bench.main()
-    fm_query_bench.main()
+    fm_query_bench.main([])
     _roofline_section()
 
 

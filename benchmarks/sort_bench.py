@@ -27,6 +27,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp
 sys.path.insert(0, os.path.join(os.getcwd(), "src"))
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.core.dist_sort import ShardInfo, bitonic_sort_sharded, samplesort_sharded
 from repro.launch.roofline import collective_bytes
 
@@ -44,9 +45,9 @@ def sample(a, b, c):
 
 out = {}
 for name, fn, nout in (("bitonic", bitonic, 3), ("samplesort", sample, 3)):
-    f = jax.jit(jax.shard_map(fn, mesh=mesh,
-                              in_specs=(P("parts"),) * 3,
-                              out_specs=(P("parts"),) * nout))
+    f = jax.jit(shard_map(fn, mesh=mesh,
+                          in_specs=(P("parts"),) * 3,
+                          out_specs=(P("parts"),) * nout))
     args = [jax.ShapeDtypeStruct((P_DEV * M,), jnp.int32,
             sharding=jax.sharding.NamedSharding(mesh, P("parts")))] * 3
     compiled = f.lower(*args).compile()

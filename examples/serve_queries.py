@@ -2,6 +2,31 @@
 batched LM token decoding (the model side) from one process.
 
     PYTHONPATH=src python examples/serve_queries.py
+
+Querying
+--------
+``FMQueryServer`` (serving/engine.py) is the production front door: it
+micro-batches mixed count/locate requests into fixed-shape jit buckets over
+an index built with SA sampling enabled::
+
+    from repro.core.pipeline import build_index
+    from repro.serving.engine import FMQueryServer
+
+    index = build_index(tokens, sample_rate=64, sa_sample_rate=32)
+    server = FMQueryServer(index, length_buckets=(8, 16, 32), locate_k=16)
+
+    server.count([q1, q2, q3])        # -> np.ndarray of exact-match counts
+    server.locate([q1], k=8)          # -> [positions per query]
+
+    t_a = server.submit(q_a, "count")  # or: interleave kinds explicitly,
+    t_b = server.submit(q_b, "locate") # flush once, read by ticket
+    results = server.flush()
+    results[t_b].positions
+    print(server.throughput_report())  # queries/s across flushes
+
+Counts come from kernel-backed backward search (bit-packed popcount rank
+when sigma <= 16); ``locate`` LF-walks to the sampled suffix array, at most
+``sa_sample_rate - 1`` rank batches per flush.
 """
 
 import time
@@ -20,10 +45,15 @@ from repro.sharding import single_device_context
 
 
 def serve_fm(n=1 << 15, batch=256, rounds=5):
+    from repro.configs.bwt_index import CONFIG as icfg
+    from repro.serving.engine import FMQueryServer
+
     toks = corpus("proteins", n)
-    index = build_index(toks, sample_rate=64)
+    index = build_index(toks, sample_rate=64,
+                        sa_sample_rate=icfg.sa_sample_rate)
     s = al.append_sentinel(toks)
     rng = np.random.default_rng(0)
+    server = FMQueryServer.from_config(index, icfg.replace(locate_k=8))
     lat = []
     for _ in range(rounds):
         pats = np.full((batch, 12), PAD, np.int32)
@@ -40,6 +70,15 @@ def serve_fm(n=1 << 15, batch=256, rounds=5):
         f"FM serving: batch={batch} p50={lat_ms[len(lat_ms) // 2]:.1f}ms "
         f"-> {batch / min(lat):.0f} queries/s"
     )
+
+    # mixed micro-batched traffic through the server front door
+    queries = [s[st : st + 8] for st in rng.integers(0, n - 9, 32)]
+    tickets = [server.submit(q, kind) for q, kind in
+               zip(queries, ["count", "locate"] * 16)]
+    results = server.flush()
+    hits = results[tickets[1]].positions
+    assert len(hits) >= 1 and np.array_equal(s[hits[0]:hits[0] + 8], queries[1])
+    print(server.throughput_report())
 
 
 def serve_lm(batch=4, prompt_len=8, gen=16):

@@ -1,0 +1,35 @@
+"""Version-compat shims for the jax API surface this repo targets.
+
+``shard_map`` graduated from ``jax.experimental.shard_map`` to the top-level
+``jax`` namespace, and its replication-check kwarg was renamed
+(``check_rep`` -> ``check_vma``) along the way.  Every call site imports
+``shard_map`` from here and uses the modern spelling; this module adapts it
+to whatever the installed jax provides.
+
+On versions that only know ``check_rep``, the checker predates per-branch
+replication inference and rejects valid programs containing ``lax.cond``
+(mismatched replication types), so the shim defaults the check off there —
+the modern checker still runs untouched on newer jax.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax <= 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+
+    def shard_map(*args, **kwargs):
+        kwargs["check_rep"] = kwargs.pop("check_vma", False)
+        return _shard_map(*args, **kwargs)
+
+
+__all__ = ["shard_map"]

@@ -22,6 +22,14 @@ class BWTIndexConfig:
     query_len: int = 32
     rounds: int | None = None     # None -> ceil(log2 n)
 
+    # query engine: pack/sa_sample_rate feed pipeline.build_index, the
+    # serve_* knobs feed serving.engine.FMQueryServer.from_config
+    pack: bool | None = None      # None: bit-pack whenever sigma <= 16
+    sa_sample_rate: int = 32      # SA sampling stride for locate() (0 = off)
+    locate_k: int = 16            # occurrences returned per locate query
+    serve_length_buckets: tuple[int, ...] = (8, 16, 32, 64)
+    serve_max_batch: int = 1024   # micro-batch cap per jit bucket
+
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)
 
@@ -30,4 +38,6 @@ CONFIG = BWTIndexConfig()
 
 
 def reduced() -> BWTIndexConfig:
-    return CONFIG.replace(n=1 << 12, query_batch=8, query_len=8, rounds=None)
+    return CONFIG.replace(n=1 << 12, query_batch=8, query_len=8, rounds=None,
+                          sa_sample_rate=8, locate_k=4,
+                          serve_length_buckets=(4, 8), serve_max_batch=8)

@@ -1,4 +1,4 @@
-"""Distributed FM-index: sharded BWT + rank queries via masked psum.
+"""Distributed FM-index: sharded (bit-packed) BWT + rank queries via psum.
 
 Scale story (DESIGN.md §2): for genome/corpus-scale indexes the BWT does not
 fit one device, so it stays sharded over the mesh ``parts`` axis.  A rank
@@ -6,12 +6,20 @@ query Occ(c, p) decomposes over position ranges:
 
     Occ(c, p) = Σ_d  count of c in  (device d's range ∩ [0, p))
 
-Each device answers from its local checkpoints (+ one in-block scan), and a
+Each device answers from its local checkpoints (+ one in-block count), and a
 single ``psum`` combines the partials — O(B) bytes of collective traffic per
 backward-search step for a batch of B queries, independent of n.
 
-``serve_step`` (batched pattern counting) is the inference path lowered in
-the multi-pod dry-run for the ``bwt_index`` config.
+The local rank path is the same engine as the single-device index: when the
+alphabet packs (sigma <= 16) each shard stores the fused
+[checkpoint | packed words] layout and dispatches through
+``kernels/ops.rank_packed`` (Pallas popcount kernel on TPU, jnp fallback
+elsewhere); larger alphabets fall back to ``ops.rank_unpacked``.
+
+``dist_count`` (batched pattern counting) is the inference path lowered in
+the multi-pod dry-run for the ``bwt_index`` config; ``dist_locate`` resolves
+occurrence positions by LF-walking to a replicated SA sample, one psum-rank
+per walk step.
 """
 
 from __future__ import annotations
@@ -24,7 +32,10 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .fm_index import PAD
+from ..compat import shard_map
+from ..kernels import ops
+from ..kernels.rank_select import pack_words, packed_bits
+from .fm_index import PAD, build_sa_samples, sample_lookup
 
 AXIS = "parts"
 
@@ -38,22 +49,31 @@ class DistFMIndex:
     occ_samples: jax.Array  # int32[nblocks, sigma] sharded (exclusive, per-shard)
     c_array: jax.Array      # int32[sigma]        replicated
     row: jax.Array          # int32 scalar        replicated
+    fused: jax.Array | None        # int32[nblocks, sigma+W] sharded (packed)
+    sa_marks: jax.Array | None     # int32[ceil(n/32)]  replicated
+    sa_mark_ranks: jax.Array | None
+    sa_vals: jax.Array | None
     sample_rate: int
     sigma: int
     length: int
     parts: int
+    bits: int               # packed field width (0 = unpacked layout)
+    sa_sample_rate: int     # 0 = locate unavailable
 
     def tree_flatten(self):
-        return ((self.bwt, self.occ_samples, self.c_array, self.row),
-                (self.sample_rate, self.sigma, self.length, self.parts))
+        return ((self.bwt, self.occ_samples, self.c_array, self.row,
+                 self.fused, self.sa_marks, self.sa_mark_ranks, self.sa_vals),
+                (self.sample_rate, self.sigma, self.length, self.parts,
+                 self.bits, self.sa_sample_rate))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children, *aux)
 
 
-def _build_local(bwt_local: jax.Array, *, sigma: int, sample_rate: int):
-    """Per-shard exclusive Occ checkpoints + local totals."""
+def _build_local(bwt_local: jax.Array, *, sigma: int, sample_rate: int,
+                 bits: int):
+    """Per-shard exclusive Occ checkpoints (+ fused packed rows) + C array."""
     m = bwt_local.shape[0]
     r = sample_rate
     nblocks = m // r
@@ -64,19 +84,28 @@ def _build_local(bwt_local: jax.Array, *, sigma: int, sample_rate: int):
     totals = cum[-1]
     counts = lax.psum(totals, AXIS)
     c_array = jnp.cumsum(counts) - counts
-    return occ_local, c_array.astype(jnp.int32)
+    if bits:
+        words = pack_words(bwt_local, bits).reshape(nblocks, -1)
+        fused = jnp.concatenate([occ_local, words], axis=1)
+    else:
+        fused = jnp.zeros((1, 1), jnp.int32)  # placeholder, unused
+    return occ_local, fused, c_array.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("sigma", "sample_rate", "mesh"))
-def _build_jit(bwt, sigma, sample_rate, mesh):
-    fn = functools.partial(_build_local, sigma=sigma, sample_rate=sample_rate)
-    return jax.shard_map(
-        fn, mesh=mesh, in_specs=P(AXIS), out_specs=(P(AXIS), P())
+@functools.partial(jax.jit, static_argnames=("sigma", "sample_rate", "bits",
+                                             "mesh"))
+def _build_jit(bwt, sigma, sample_rate, bits, mesh):
+    fn = functools.partial(_build_local, sigma=sigma, sample_rate=sample_rate,
+                           bits=bits)
+    return shard_map(
+        fn, mesh=mesh, in_specs=P(AXIS),
+        out_specs=(P(AXIS), P(AXIS) if bits else P(), P()),
     )(bwt)
 
 
 def build_dist_fm_index(
-    bwt, row, mesh: Mesh, *, sigma: int, sample_rate: int = 64
+    bwt, row, mesh: Mesh, *, sigma: int, sample_rate: int = 64,
+    sa=None, sa_sample_rate: int = 32, pack: bool | None = None,
 ) -> DistFMIndex:
     n = bwt.shape[0]
     parts = mesh.shape[AXIS]
@@ -84,45 +113,62 @@ def build_dist_fm_index(
         raise ValueError(
             f"n={n} must be divisible by parts*sample_rate={parts}*{sample_rate}"
         )
+    bits = 0 if pack is False else packed_bits(sigma, sample_rate)
+    if pack and not bits:
+        raise ValueError(
+            f"cannot pack sigma={sigma} at sample_rate={sample_rate}"
+        )
     bwt = jax.device_put(bwt, NamedSharding(mesh, P(AXIS)))
-    occ_samples, c_array = _build_jit(bwt, sigma, sample_rate, mesh)
+    occ_samples, fused, c_array = _build_jit(bwt, sigma, sample_rate, bits,
+                                             mesh)
+    if sa is not None:
+        sa_marks, sa_mark_ranks, sa_vals = build_sa_samples(sa, sa_sample_rate)
+    else:
+        sa_marks = sa_mark_ranks = sa_vals = None
+        sa_sample_rate = 0
     return DistFMIndex(
         bwt, occ_samples, c_array, jnp.asarray(row, jnp.int32),
-        sample_rate, sigma, n, parts,
+        fused if bits else None, sa_marks, sa_mark_ranks, sa_vals,
+        sample_rate, sigma, n, parts, bits, sa_sample_rate,
     )
 
 
-def _occ_partial(bwt_local, occ_local, c, p, *, m, r):
-    """count of character c in (my range ∩ [0, p)) — vectorised over queries.
+def _occ_partial(bwt_local, occ_local, fused_local, c, p, *, m, r, bits,
+                 sigma):
+    """count of character c in (my range ∩ [0, p)) — vectorised over queries,
+    dispatched through kernels/ops on the local shard's layout.
 
-    bwt_local int32[m], occ_local int32[m/r, sigma]; c, p int32[B].
+    bwt_local int32[m]; c, p int32[B].  p_loc == m folds into the last block
+    (cutoff r), so base + in-block covers exactly [0, m) with no tail case.
     """
     me = lax.axis_index(AXIS)
     p_loc = jnp.clip(p - me * m, 0, m)          # clip into my range
     block = jnp.minimum(p_loc // r, m // r - 1)
+    cut = p_loc - block * r
+    if bits:
+        return ops.rank_packed(fused_local, block, c, cut,
+                               bits=bits, sigma=sigma)
     base = occ_local[block, c]                   # (B,)
-    start = block * r
-    window = bwt_local[start[:, None] + jnp.arange(r)[None, :]]   # (B, r)
-    inblock = jnp.sum(
-        (window == c[:, None]) & (start[:, None] + jnp.arange(r)[None, :] < p_loc[:, None]),
-        axis=1,
-    )
-    # p_loc == m: block = m//r - 1, inblock counts the whole last block, so
-    # base + inblock covers exactly [0, m) — no tail case needed.
+    inblock = ops.rank_unpacked(bwt_local.reshape(m // r, r), block, c, cut)
     return (base + inblock).astype(jnp.int32)
 
 
-def _search_local(bwt_local, occ_local, c_array, patterns, *, m, r, n):
+def _search_local(bwt_local, occ_local, fused_local, c_array, patterns,
+                  *, m, r, n, bits, sigma):
     """shard_map body: batched backward search over replicated patterns."""
 
     def step(state, c):
         sp, ep = state
-        sigma = c_array.shape[0]
         in_alphabet = (c >= 1) & (c < sigma)
         valid = in_alphabet & (ep > sp)
         c_safe = jnp.where(in_alphabet, c, 0)
-        occ_sp = lax.psum(_occ_partial(bwt_local, occ_local, c_safe, sp, m=m, r=r), AXIS)
-        occ_ep = lax.psum(_occ_partial(bwt_local, occ_local, c_safe, ep, m=m, r=r), AXIS)
+        occ_kw = dict(m=m, r=r, bits=bits, sigma=sigma)
+        occ_sp = lax.psum(
+            _occ_partial(bwt_local, occ_local, fused_local, c_safe, sp,
+                         **occ_kw), AXIS)
+        occ_ep = lax.psum(
+            _occ_partial(bwt_local, occ_local, fused_local, c_safe, ep,
+                         **occ_kw), AXIS)
         nsp = c_array[c_safe] + occ_sp
         nep = c_array[c_safe] + occ_ep
         sp = jnp.where(valid, nsp, sp)
@@ -137,19 +183,25 @@ def _search_local(bwt_local, occ_local, c_array, patterns, *, m, r, n):
     return sp, ep
 
 
+def _fused_operand(index: DistFMIndex):
+    """The fused operand to ship into shard_map — a replicated dummy when
+    the index is unpacked (the jits spec it P(AXIS) iff index.bits)."""
+    return index.fused if index.bits else jnp.zeros((1, 1), jnp.int32)
+
+
 @functools.partial(jax.jit, static_argnames=("index_static", "mesh"))
 def _count_jit(index_arrays, patterns, index_static, mesh):
-    sample_rate, sigma, n, parts = index_static
-    bwt, occ_samples, c_array, _row = index_arrays
+    sample_rate, sigma, n, parts, bits = index_static
+    bwt, occ_samples, c_array, fused = index_arrays
     m = n // parts
     fn = functools.partial(
-        _search_local, m=m, r=sample_rate, n=n
+        _search_local, m=m, r=sample_rate, n=n, bits=bits, sigma=sigma
     )
-    sp, ep = jax.shard_map(
+    sp, ep = shard_map(
         fn, mesh=mesh,
-        in_specs=(P(AXIS), P(AXIS), P(), P()),
+        in_specs=(P(AXIS), P(AXIS), P(AXIS) if bits else P(), P(), P()),
         out_specs=(P(), P()),
-    )(bwt, occ_samples, c_array, patterns)
+    )(bwt, occ_samples, fused, c_array, patterns)
     return jnp.maximum(ep - sp, 0)
 
 
@@ -158,5 +210,83 @@ def dist_count(index: DistFMIndex, patterns, mesh: Mesh) -> jax.Array:
 
     ``patterns``: int32[B, L], PAD-padded on the right, replicated.
     """
-    arrays, aux = index.tree_flatten()
-    return _count_jit(arrays, jnp.asarray(patterns), aux, mesh)
+    arrays = (index.bwt, index.occ_samples, index.c_array,
+              _fused_operand(index))
+    static = (index.sample_rate, index.sigma, index.length, index.parts,
+              index.bits)
+    return _count_jit(arrays, jnp.asarray(patterns), static, mesh)
+
+
+def _locate_local(bwt_local, occ_local, fused_local, c_array,
+                  marks, mark_ranks, vals, patterns,
+                  *, m, r, n, bits, sigma, s, k):
+    """shard_map body: backward search + LF-walk to the replicated SA sample.
+
+    Every walk step costs one psum'd rank batch plus one psum'd BWT-symbol
+    gather; positions/marks are replicated so all shards agree lane-by-lane.
+    """
+    sp, ep = _search_local(bwt_local, occ_local, fused_local, c_array,
+                           patterns, m=m, r=r, n=n, bits=bits, sigma=sigma)
+    B = sp.shape[0]
+    me = lax.axis_index(AXIS)
+    rows = sp[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :]
+    valid = (rows < ep[:, None]).reshape(-1)
+    rows = jnp.where(valid, rows.reshape(-1), 0)
+    occ_kw = dict(m=m, r=r, bits=bits, sigma=sigma)
+
+    def bwt_at(rows):
+        loc = rows - me * m
+        inside = (loc >= 0) & (loc < m)
+        sym = jnp.where(inside, bwt_local[jnp.clip(loc, 0, m - 1)], 0)
+        return lax.psum(sym, AXIS)
+
+    def body(_, st):
+        rows, pos, steps, done = st
+        marked, val = sample_lookup(marks, mark_ranks, vals, rows)
+        pos = jnp.where(marked & ~done, val + steps, pos)
+        done = done | marked
+        c = bwt_at(rows)
+        nxt = c_array[c] + lax.psum(
+            _occ_partial(bwt_local, occ_local, fused_local, c, rows, **occ_kw),
+            AXIS)
+        rows = jnp.where(done, rows, nxt)
+        steps = steps + jnp.where(done, 0, 1)
+        return rows, pos, steps, done
+
+    zeros = jnp.zeros(B * k, jnp.int32)
+    _, pos, _, _ = lax.fori_loop(0, s, body, (rows, zeros, zeros, ~valid))
+    out = jnp.where(valid, pos, n).reshape(B, k)
+    return jnp.sort(out, axis=1), jnp.minimum(jnp.maximum(ep - sp, 0), k)
+
+
+@functools.partial(jax.jit, static_argnames=("index_static", "k", "mesh"))
+def _locate_jit(index_arrays, patterns, index_static, k, mesh):
+    sample_rate, sigma, n, parts, bits, s = index_static
+    bwt, occ_samples, c_array, fused, marks, mark_ranks, vals = index_arrays
+    m = n // parts
+    fn = functools.partial(
+        _locate_local, m=m, r=sample_rate, n=n, bits=bits, sigma=sigma,
+        s=s, k=k,
+    )
+    return shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(AXIS), P(AXIS), P(AXIS) if bits else P(), P(),
+                  P(), P(), P(), P()),
+        out_specs=(P(), P()),
+    )(bwt, occ_samples, fused, c_array, marks, mark_ranks, vals, patterns)
+
+
+def dist_locate(index: DistFMIndex, patterns, k: int, mesh: Mesh):
+    """First-k occurrence positions per pattern over the sharded index.
+
+    Returns (positions int32[B, k] sorted ascending, n-filled; counts
+    int32[B] clipped to k) — same contract as ``fm_index.locate``.
+    """
+    if index.sa_sample_rate == 0:
+        raise ValueError("index built without sa= — locate unavailable")
+    arrays = (index.bwt, index.occ_samples, index.c_array,
+              _fused_operand(index),
+              index.sa_marks, index.sa_mark_ranks, index.sa_vals)
+    static = (index.sample_rate, index.sigma, index.length, index.parts,
+              index.bits, index.sa_sample_rate)
+    return _locate_jit(arrays, jnp.asarray(patterns), static, k, mesh)

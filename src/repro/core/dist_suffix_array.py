@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
+
 from .dist_sort import (
     ShardInfo,
     bitonic_sort_sharded,
@@ -207,7 +209,7 @@ def isa_overflowed(isa) -> bool:
 def _isa_jit(s, sigma, cfg, mesh_axis_size, mesh):
     info = ShardInfo(cfg.axis, mesh_axis_size, s.shape[0] // mesh_axis_size)
     fn = functools.partial(dist_isa_local, info, cfg, sigma=sigma)
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh, in_specs=P(cfg.axis), out_specs=P(cfg.axis)
     )(s)
 
@@ -230,7 +232,7 @@ def build_isa_sharded(s, mesh: Mesh, cfg: DistSAConfig = DistSAConfig(), *, sigm
 def _bwt_jit(s, isa, cfg, mesh_axis_size, mesh):
     info = ShardInfo(cfg.axis, mesh_axis_size, s.shape[0] // mesh_axis_size)
     fn = functools.partial(dist_bwt_local, info, cfg)
-    return jax.shard_map(
+    return shard_map(
         fn,
         mesh=mesh,
         in_specs=(P(cfg.axis), P(cfg.axis)),

@@ -1,29 +1,43 @@
-"""FM-index over a BWT: C array, sampled Occ checkpoints, backward search.
+"""FM-index over a BWT: C array, Occ checkpoints, backward search, locate.
 
 This is the "full-text index that enables fast querying" the paper builds
 toward (§1): exact pattern matching in O(m) rank queries per pattern,
-independent of the indexed-text length.
+independent of the indexed-text length, plus occurrence localisation via a
+sampled suffix array.
 
 Layout (all dense arrays, shard- and jit-friendly):
 
-* ``bwt``          int32[n]      last column
+* ``bwt``          int32[n_blocks * r]  last column, PAD beyond position n
 * ``C``            int32[sigma]  # chars strictly smaller (exclusive cumsum)
-* ``occ_samples``  int32[n/r + 1, sigma]  checkpointed exclusive Occ counts
-* rank(c, p) = occ_samples[p // r, c] + count of c in bwt[(p//r)*r : p]
+* ``occ_samples``  int32[n_blocks + 1, sigma]  checkpointed exclusive Occ
+* ``fused``        int32[n_blocks, sigma + r/fpw]  (small alphabets only)
+  per-block [Occ checkpoint | bit-packed words] — the interleaved succinct
+  layout the Pallas rank kernel consumes (kernels/rank_select.py)
+* ``sa_marks/sa_mark_ranks/sa_vals``  SA sample for locate(): rows whose SA
+  value is a multiple of ``sa_sample_rate`` are marked in a bitvector (with
+  per-word popcount checkpoints) and their values stored in row order; any
+  occurrence is recovered by LF-walking <= sa_sample_rate - 1 steps to a
+  marked row.
 
-``sample_rate`` trades memory (n*sigma/r ints) for per-query scan length r —
-the classic FM-index trade-off the paper cites ([4] Ferragina-Manzini).
-The in-block count is the hot spot; ``kernels/rank_select`` provides the
-Pallas TPU version, this module is the jnp reference.
+rank(c, p) = occ_samples[p // r, c] + count of c in bwt[(p//r)*r : p].
+``sample_rate`` trades memory for per-query scan length r — the classic
+FM-index trade-off the paper cites ([4] Ferragina-Manzini).  The in-block
+count is the hot spot; all query paths dispatch through ``kernels/ops``
+(packed popcount Pallas kernel on TPU, vectorised jnp fallback elsewhere).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
+
+from ..kernels import ops
+from ..kernels.rank_select import pack_words, packed_bits
 
 PAD = -1  # query padding token
 
@@ -31,30 +45,77 @@ PAD = -1  # query padding token
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class FMIndex:
-    bwt: jax.Array          # int32[n_blocks * r], PAD beyond position n
-    row: jax.Array          # scalar int32: row of the original string
-    c_array: jax.Array      # int32[sigma]
-    occ_samples: jax.Array  # int32[n_blocks + 1, sigma]
-    sample_rate: int        # static (pytree aux data)
-    sigma: int              # static (pytree aux data)
-    length: int             # static: true text length n
+    bwt: jax.Array            # int32[n_blocks * r], PAD beyond position n
+    row: jax.Array            # scalar int32: row of the original string
+    c_array: jax.Array        # int32[sigma]
+    occ_samples: jax.Array    # int32[n_blocks + 1, sigma]
+    fused: jax.Array | None   # int32[n_blocks, sigma + W] packed layout
+    sa_marks: jax.Array | None       # int32[ceil(n/32)] bitvector
+    sa_mark_ranks: jax.Array | None  # int32[ceil(n/32)] excl. popcount cumsum
+    sa_vals: jax.Array | None        # int32[#marked] SA values, row order
+    sample_rate: int          # static (pytree aux data)
+    sigma: int                # static (pytree aux data)
+    length: int               # static: true text length n
+    bits: int                 # static: packed field width (0 = unpacked)
+    sa_sample_rate: int       # static: SA sampling stride (0 = no locate)
 
     @property
     def n(self) -> int:
         return self.length
 
+    @property
+    def n_blocks(self) -> int:
+        return self.occ_samples.shape[0] - 1
+
     def tree_flatten(self):
-        return ((self.bwt, self.row, self.c_array, self.occ_samples),
-                (self.sample_rate, self.sigma, self.length))
+        return (
+            (self.bwt, self.row, self.c_array, self.occ_samples, self.fused,
+             self.sa_marks, self.sa_mark_ranks, self.sa_vals),
+            (self.sample_rate, self.sigma, self.length, self.bits,
+             self.sa_sample_rate),
+        )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children, *aux)
 
 
+def build_sa_samples(sa, sa_sample_rate: int):
+    """(marks, mark_ranks, vals) for locate(): host-side, exact.
+
+    Rows i with SA[i] % s == 0 are marked; their SA values are stored in row
+    order.  Value lookup for marked row i is vals[mark_ranks[i//32] +
+    popcount(marks[i//32] & low_bits(i%32))] — O(1), fully vectorisable.
+    """
+    sa_np = np.asarray(sa)
+    n = sa_np.shape[0]
+    marked = (sa_np % sa_sample_rate) == 0
+    idx = np.nonzero(marked)[0]
+    nwords = -(-n // 32)
+    words = np.zeros(nwords, np.uint32)
+    np.bitwise_or.at(
+        words, idx // 32, np.uint32(1) << (idx % 32).astype(np.uint32)
+    )
+    pc = np.unpackbits(words.view(np.uint8)).reshape(nwords, 32).sum(axis=1)
+    ranks = (np.cumsum(pc) - pc).astype(np.int32)
+    vals = sa_np[marked].astype(np.int32)  # SA holds 0, so never empty
+    return (
+        jnp.asarray(words.view(np.int32)),
+        jnp.asarray(ranks),
+        jnp.asarray(vals),
+    )
+
+
 def build_fm_index(
-    bwt_arr: jax.Array, row: jax.Array, sigma: int, sample_rate: int = 64
+    bwt_arr: jax.Array, row: jax.Array, sigma: int, sample_rate: int = 64,
+    *, sa: jax.Array | None = None, sa_sample_rate: int = 32,
+    pack: bool | None = None,
 ) -> FMIndex:
+    """Build the query index.  ``pack=None`` bit-packs whenever the alphabet
+    fits (sigma <= 16 and r divisible by the fields-per-word); ``pack=False``
+    forces the unpacked layout (benchmark baseline).  Passing the suffix
+    array ``sa`` enables ``locate`` via SA sampling.
+    """
     n = bwt_arr.shape[0]
     counts = jnp.bincount(bwt_arr, length=sigma)
     c_array = (jnp.cumsum(counts) - counts).astype(jnp.int32)
@@ -67,37 +128,72 @@ def build_fm_index(
     occ_samples = jnp.concatenate(
         [jnp.zeros((1, sigma), jnp.int32), jnp.cumsum(block_counts, axis=0)]
     )  # exclusive checkpoints: occ_samples[k] counts bwt[: k*r]
+
+    bits = 0 if pack is False else packed_bits(sigma, sample_rate)
+    if pack and not bits:
+        raise ValueError(
+            f"cannot pack sigma={sigma} at sample_rate={sample_rate}"
+        )
+    fused = None
+    if bits:
+        words = pack_words(padded, bits).reshape(n_blocks, -1)
+        fused = jnp.concatenate([occ_samples[:-1], words], axis=1)
+
+    if sa is not None:
+        sa_marks, sa_mark_ranks, sa_vals = build_sa_samples(sa, sa_sample_rate)
+    else:
+        sa_marks = sa_mark_ranks = sa_vals = None
+        sa_sample_rate = 0
+
     # the padded copy keeps every in-block dynamic_slice in bounds
     return FMIndex(padded, jnp.asarray(row, jnp.int32), c_array, occ_samples,
-                   sample_rate, sigma, n)
+                   fused, sa_marks, sa_mark_ranks, sa_vals,
+                   sample_rate, sigma, n, bits, sa_sample_rate)
+
+
+def occ_batch(index: FMIndex, c: jax.Array, p: jax.Array) -> jax.Array:
+    """# occurrences of c_i in ``bwt[:p_i]`` (exclusive rank), batched.
+
+    Dispatches through kernels/ops: packed popcount rank when the index is
+    bit-packed, batched unpacked gather otherwise.  p == n_blocks*r is
+    folded into the last block (cutoff r) so checkpoints beyond the fused
+    rows are never needed.
+    """
+    r = index.sample_rate
+    blk = jnp.minimum(p // r, index.n_blocks - 1)
+    cut = p - blk * r
+    if index.bits:
+        return ops.rank_packed(index.fused, blk, c, cut,
+                               bits=index.bits, sigma=index.sigma)
+    base = index.occ_samples[blk, c]
+    blocks = index.bwt.reshape(index.n_blocks, r)
+    return base + ops.rank_unpacked(blocks, blk, c, cut)
 
 
 def occ(index: FMIndex, c: jax.Array, p: jax.Array) -> jax.Array:
-    """# occurrences of character ``c`` in ``bwt[:p]`` (exclusive rank)."""
-    r = index.sample_rate
-    block = p // r
-    base = index.occ_samples[block, c]
-    start = block * r
-    # count c in bwt[start : p] — fixed-width window + position mask
-    window = lax.dynamic_slice(index.bwt, (start,), (r,))
-    inblock = jnp.sum((window == c) & (start + jnp.arange(r) < p))
-    return base + inblock.astype(jnp.int32)
+    """Scalar Occ(c, p) — convenience wrapper over the batched path."""
+    return occ_batch(index, c[None] if c.ndim == 0 else c,
+                     p[None] if p.ndim == 0 else p)[0]
 
 
-def backward_search(index: FMIndex, pattern: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """(sp, ep) suffix-array interval of ``pattern`` (PAD-padded on the right).
+def backward_search_batch(
+    index: FMIndex, patterns: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """(sp, ep) suffix-array intervals for int32[B, m] PAD-padded patterns.
 
-    Count of exact occurrences is ``ep - sp``.
+    Count of exact occurrences is ``ep - sp``.  One scan step per pattern
+    position; each step issues a single batched rank call per interval end,
+    so the whole batch shares kernel launches.
     """
-    n = index.n
+    B = patterns.shape[0]
 
     def step(state, c):
         sp, ep = state
         in_alphabet = (c >= 1) & (c < index.sigma)
         valid = in_alphabet & (ep > sp)
         c_safe = jnp.where(in_alphabet, c, 0)
-        nsp = index.c_array[c_safe] + occ(index, c_safe, sp)
-        nep = index.c_array[c_safe] + occ(index, c_safe, ep)
+        nsp = index.c_array[c_safe] + occ_batch(index, c_safe, sp)
+        nep = index.c_array[c_safe] + occ_batch(index, c_safe, ep)
         # PAD steps are no-ops; an already-empty interval stays empty;
         # an out-of-alphabet symbol (unknown to the index) empties it
         sp = jnp.where(valid, nsp, sp)
@@ -106,20 +202,99 @@ def backward_search(index: FMIndex, pattern: jax.Array) -> tuple[jax.Array, jax.
 
     # process right-to-left; PADs sit on the right so they come first and
     # are skipped by ``valid``
-    (sp, ep), _ = lax.scan(step, (jnp.int32(0), jnp.int32(n)), pattern[::-1])
+    init = (jnp.zeros(B, jnp.int32), jnp.full((B,), index.n, jnp.int32))
+    (sp, ep), _ = lax.scan(step, init, patterns.T[::-1])
     return sp, ep
+
+
+def backward_search(index: FMIndex, pattern: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Single-pattern (sp, ep) — batched path with B=1."""
+    sp, ep = backward_search_batch(index, pattern[None, :])
+    return sp[0], ep[0]
 
 
 @jax.jit
 def count(index: FMIndex, patterns: jax.Array) -> jax.Array:
     """Batched exact-match counts: patterns int32[B, m] PAD-padded."""
-    sp, ep = jax.vmap(lambda p: backward_search(index, p))(patterns)
+    sp, ep = backward_search_batch(index, patterns)
     return jnp.maximum(ep - sp, 0)
 
 
+def sample_lookup(marks, mark_ranks, vals, rows):
+    """(marked, value) of the SA sample at each row (value garbage when
+    unmarked).  Raw-array form shared with the distributed index."""
+    w = rows // 32
+    b = (rows % 32).astype(jnp.uint32)
+    word = lax.bitcast_convert_type(marks[w], jnp.uint32)
+    marked = ((word >> b) & jnp.uint32(1)).astype(bool)
+    below = lax.population_count(
+        word & ((jnp.uint32(1) << b) - jnp.uint32(1))
+    )
+    idx = mark_ranks[w] + below.astype(jnp.int32)
+    val = vals[jnp.clip(idx, 0, vals.shape[0] - 1)]
+    return marked, val
+
+
+def _sample_lookup(index: FMIndex, rows: jax.Array):
+    return sample_lookup(index.sa_marks, index.sa_mark_ranks, index.sa_vals,
+                         rows)
+
+
+def bwt_symbol(index: FMIndex, rows: jax.Array) -> jax.Array:
+    """bwt[rows] batched — extracted from packed words when bit-packed, so
+    the locate walk touches only the compact layout."""
+    if not index.bits:
+        return index.bwt[rows]
+    r, bits = index.sample_rate, index.bits
+    fpw = 32 // bits
+    j = rows % r
+    word = index.fused[rows // r, index.sigma + j // fpw]
+    w = lax.bitcast_convert_type(word, jnp.uint32)
+    sh = ((j % fpw) * bits).astype(jnp.uint32)
+    return ((w >> sh) & jnp.uint32((1 << bits) - 1)).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def locate(
+    index: FMIndex, patterns: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """First-k occurrence positions per pattern via the SA sample.
+
+    patterns int32[B, m] PAD-padded.  Returns (positions int32[B, k] sorted
+    ascending with ``n`` filling unused slots, counts int32[B] clipped to k).
+    Each of the B*k candidate rows LF-walks (<= sa_sample_rate - 1 steps,
+    every step one batched rank call) to its nearest marked row; position =
+    sampled value + steps walked.
+    """
+    if index.sa_sample_rate == 0:
+        raise ValueError("index built without sa= — locate unavailable")
+    sp, ep = backward_search_batch(index, patterns)
+    B = sp.shape[0]
+    rows = (sp[:, None] + jnp.arange(k, dtype=jnp.int32)[None, :])
+    valid = (rows < ep[:, None]).reshape(-1)
+    rows = jnp.where(valid, rows.reshape(-1), 0)
+
+    def body(_, st):
+        rows, pos, steps, done = st
+        marked, val = _sample_lookup(index, rows)
+        pos = jnp.where(marked & ~done, val + steps, pos)
+        done = done | marked
+        c = bwt_symbol(index, rows)
+        nxt = index.c_array[c] + occ_batch(index, c, rows)
+        rows = jnp.where(done, rows, nxt)
+        steps = steps + jnp.where(done, 0, 1)
+        return rows, pos, steps, done
+
+    zeros = jnp.zeros(B * k, jnp.int32)
+    _, pos, _, _ = lax.fori_loop(
+        0, index.sa_sample_rate, body, (rows, zeros, zeros, ~valid)
+    )
+    out = jnp.where(valid, pos, index.n).reshape(B, k)
+    return jnp.sort(out, axis=1), jnp.minimum(jnp.maximum(ep - sp, 0), k)
+
+
 def locate_naive(index: FMIndex, sa: jax.Array, pattern: jax.Array) -> jax.Array:
-    """Occurrence positions via a full SA (test oracle — production locate
-    would use an SA sample, out of the paper's scope)."""
+    """Occurrence positions via a full SA (test oracle for ``locate``)."""
     sp, ep = backward_search(index, pattern)
     return jnp.sort(jnp.where(
         (jnp.arange(index.n) >= sp) & (jnp.arange(index.n) < ep), sa, index.n
@@ -128,8 +303,6 @@ def locate_naive(index: FMIndex, sa: jax.Array, pattern: jax.Array) -> jax.Array
 
 def count_naive(text, pattern) -> int:
     """Overlapping substring-count numpy oracle."""
-    import numpy as np
-
     text, pattern = np.asarray(text), np.asarray(pattern)
     m = len(pattern)
     if m == 0 or m > len(text):

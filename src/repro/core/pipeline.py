@@ -22,14 +22,19 @@ from jax.sharding import Mesh
 
 from . import alphabet as al
 from .bwt import bwt_from_sa
-from .dist_fm import DistFMIndex, build_dist_fm_index, dist_count
+from .dist_fm import DistFMIndex, build_dist_fm_index, dist_count, dist_locate
 from .dist_suffix_array import (
     DistSAConfig,
     _bwt_jit,
     build_isa_sharded,
     isa_overflowed,
 )
-from .fm_index import FMIndex, build_fm_index, count as fm_count
+from .fm_index import (
+    FMIndex,
+    build_fm_index,
+    count as fm_count,
+    locate as fm_locate,
+)
 from .suffix_array import suffix_array
 
 
@@ -53,6 +58,15 @@ class SequenceIndex:
             return fm_count(self.fm, patterns)
         return dist_count(self.fm, patterns, self.mesh)
 
+    def locate(self, patterns, k: int) -> tuple[jax.Array, jax.Array]:
+        """First-k occurrence positions per pattern via the SA sample built
+        during indexing.  Returns (positions int32[B, k] sorted, filled with
+        the padded length for unused slots; counts int32[B] clipped to k)."""
+        patterns = jnp.asarray(patterns, jnp.int32)
+        if self.mesh is None:
+            return fm_locate(self.fm, patterns, k)
+        return dist_locate(self.fm, patterns, k, self.mesh)
+
 
 def prepare_tokens(tokens: np.ndarray, multiple: int) -> tuple[np.ndarray, int]:
     """Sentinel-terminate and pad to a multiple; returns (padded, sigma)."""
@@ -72,21 +86,30 @@ def build_index(
     sample_rate: int = 64,
     sa_config: DistSAConfig = DistSAConfig(),
     max_retries: int = 3,
+    sa_sample_rate: int = 32,
+    pack: bool | None = None,
 ) -> SequenceIndex:
     """Build a (distributed) BWT/FM index over raw tokens (no sentinel).
+
+    The suffix array produced as a build byproduct is sampled every
+    ``sa_sample_rate``-th text position into the index, enabling
+    ``SequenceIndex.locate`` (set 0 to skip).  ``pack`` as in
+    ``build_fm_index`` (None = bit-pack when the alphabet fits).
 
     With a mesh, retries samplesort capacity overflows with doubled factor —
     the explicit analogue of Spark skew recovery (DESIGN.md §4).
     """
     tokens = np.asarray(tokens, dtype=np.int32)
     text_length = len(tokens) + 1
+    sa_kw = dict(sa_sample_rate=sa_sample_rate) if sa_sample_rate else {}
 
     if mesh is None:
         s, sigma = prepare_tokens(tokens, sample_rate)
         s_dev = jnp.asarray(s)
         sa = suffix_array(s_dev, sigma)
         bwt_arr, row = bwt_from_sa(s_dev, sa)
-        fm = build_fm_index(bwt_arr, row, sigma, sample_rate)
+        fm = build_fm_index(bwt_arr, row, sigma, sample_rate, pack=pack,
+                            sa=sa if sa_sample_rate else None, **sa_kw)
         return SequenceIndex(fm, sa, bwt_arr, row, sigma, len(s), text_length)
 
     parts = mesh.shape[sa_config.axis]
@@ -109,6 +132,7 @@ def build_index(
     )
     sa, bwt_arr, row = _bwt_jit(s_sharded, isa, cfg, parts, mesh)
     fm = build_dist_fm_index(bwt_arr, row, mesh, sigma=sigma,
-                             sample_rate=sample_rate)
+                             sample_rate=sample_rate, pack=pack,
+                             sa=sa if sa_sample_rate else None, **sa_kw)
     return SequenceIndex(fm, sa, bwt_arr, row, sigma, len(s), text_length,
                          mesh=mesh)

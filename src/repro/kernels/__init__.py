@@ -5,4 +5,11 @@ ops.py, and a pure-jnp oracle in ref.py; tests sweep shapes/dtypes and
 assert exact agreement in interpret mode.
 """
 
-from .ops import char_histogram, radix_hist, rank_select, rerank_scan  # noqa: F401
+from .ops import (  # noqa: F401
+    char_histogram,
+    radix_hist,
+    rank_packed,
+    rank_select,
+    rank_unpacked,
+    rerank_scan,
+)

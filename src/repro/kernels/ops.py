@@ -12,14 +12,22 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from . import ref
 from .char_histogram import char_histogram_pallas
 from .radix_hist import radix_hist_pallas
-from .rank_select import rank_select_pallas
+from .rank_select import rank_packed_jnp, rank_packed_pallas, rank_select_pallas
 from .rerank_scan import rerank_scan_pallas
 
 
 def _interpret_default() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _rank_impl_default() -> str:
+    """Build-time backend selection for the rank hot path: the real Pallas
+    kernel on TPU, the pure-jnp popcount fallback elsewhere ("interpret" is
+    opt-in for kernel parity tests — far too slow to serve from)."""
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
 
 
 @functools.partial(jax.jit, static_argnames=("sigma", "block_rows", "interpret"))
@@ -71,4 +79,44 @@ def rank_select(bwt_blocks, block_idx, c, cutoff, *, interpret: bool | None = No
     interpret = _interpret_default() if interpret is None else interpret
     return rank_select_pallas(
         bwt_blocks, block_idx, c, cutoff, interpret=interpret
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bits", "sigma", "queries_per_step", "impl")
+)
+def rank_packed(fused, block_idx, c, cutoff, *, bits: int, sigma: int,
+                queries_per_step: int = 8, impl: str | None = None):
+    """Full rank queries (checkpoint base + in-block popcount) over the
+    fused packed layout.  ``impl``: None -> backend default ("pallas" on
+    TPU, "jnp" elsewhere); "interpret" runs the kernel in interpret mode
+    for parity testing.
+    """
+    impl = _rank_impl_default() if impl is None else impl
+    if impl == "jnp":
+        return rank_packed_jnp(fused, block_idx, c, cutoff,
+                               bits=bits, sigma=sigma)
+    B = block_idx.shape[0]
+    pad = (-B) % queries_per_step
+    if pad:
+        z = jnp.zeros(pad, jnp.int32)
+        block_idx, c, cutoff = (
+            jnp.concatenate([a, z]) for a in (block_idx, c, cutoff)
+        )
+    out = rank_packed_pallas(
+        fused, block_idx, c, cutoff, bits=bits, sigma=sigma,
+        queries_per_step=queries_per_step, interpret=(impl == "interpret"),
+    )
+    return out[:B]
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def rank_unpacked(bwt_blocks, block_idx, c, cutoff, *, impl: str | None = None):
+    """Batched in-block rank counts over unpacked int32 blocks (the sigma>16
+    layout): scalar-prefetch kernel on TPU, vectorised gather elsewhere."""
+    impl = _rank_impl_default() if impl is None else impl
+    if impl == "jnp":
+        return ref.rank_select_ref(bwt_blocks, block_idx, c, cutoff)
+    return rank_select_pallas(
+        bwt_blocks, block_idx, c, cutoff, interpret=(impl == "interpret")
     )

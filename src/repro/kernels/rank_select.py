@@ -1,19 +1,170 @@
-"""Pallas TPU kernel: FM-index in-block rank queries via scalar prefetch.
+"""Pallas TPU kernels for FM-index rank queries over a bit-packed BWT.
 
-The serving hot spot: each backward-search step needs Occ(c, p) for a batch
-of data-dependent positions.  The checkpointed base is a cheap gather; the
-in-block count needs the right BWT tile per query.  On TPU this is the
-canonical scalar-prefetch pattern: the block indices arrive as prefetched
-scalars, and the BlockSpec index_map selects which HBM tile to DMA into
-VMEM for each grid step — a data-dependent gather expressed structurally.
+Layout (the "succinct" direction of Sirén's terabase-scale BWT work): the
+BWT is planed into 2-bit (sigma <= 4) or 4-bit (sigma <= 16) fields packed
+LSB-first into int32 words, and each checkpoint block is stored as one
+*fused* row
+
+    fused[b] = [ Occ checkpoint (sigma int32) | packed words (r/fpw int32) ]
+
+so a single row fetch (one cache line / one DMA) yields both the rank base
+and the block payload — the interleaved-checkpoint struct of classic
+cache-aware FM indexes.
+
+``rank_packed_pallas`` is the fused kernel: a grid step answers
+``queries_per_step`` rank queries against the whole fused array resident in
+VMEM (bit-packing shrinks it 8-16x vs int32 symbols, so corpus-scale shards
+fit), counting matches popcount-style over packed words instead of scanning
+symbols.  ``rank_packed_jnp`` is the same math as a pure-jnp fallback for
+hosts without a TPU (selected at build/dispatch time in ``ops.py``).
+
+``rank_select_pallas`` is the legacy one-query-per-grid-step scalar-prefetch
+kernel over *unpacked* int32 blocks; it remains the fallback layout for
+alphabets too large to pack (sigma > 16).
 """
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+# LSB of every 2-bit / 4-bit field — replicating a symbol across fields is
+# one multiply; a field equals the symbol iff its XOR-difference is zero.
+_REP = {2: 0x55555555, 4: 0x11111111}
+
+
+def packed_bits(sigma: int, sample_rate: int) -> int:
+    """Field width for (sigma, block length r): 2, 4, or 0 (unpackable)."""
+    for bits in (2, 4):
+        if sigma <= (1 << bits) and sample_rate % (32 // bits) == 0:
+            return bits
+    return 0
+
+
+def pack_words(symbols: jax.Array, bits: int) -> jax.Array:
+    """int32[k*fpw] symbols in [0, 2^bits) -> int32[k] packed words.
+
+    Negative entries (PAD tails) pack as 0; rank queries never reach them
+    because in-block cutoffs are bounded by the true text length.
+    """
+    fpw = 32 // bits
+    v = jnp.maximum(symbols, 0).astype(jnp.uint32).reshape(-1, fpw)
+    shifts = jnp.arange(fpw, dtype=jnp.uint32) * jnp.uint32(bits)
+    words = jnp.sum(v << shifts[None, :], axis=1, dtype=jnp.uint32)
+    return lax.bitcast_convert_type(words, jnp.int32)
+
+
+def _eq_fields(x: jax.Array, bits: int) -> jax.Array:
+    """Per-field zero test on XOR-ed packed words: LSB of each field is 1
+    iff the whole field is 0 (i.e. the symbols matched)."""
+    rep = jnp.uint32(_REP[bits])
+    t = x | (x >> 1)
+    if bits == 4:
+        t = t | (t >> 2)
+    return (t & rep) ^ rep
+
+
+def _cutoff_mask(word_iota, cutoff, bits: int):
+    """uint32 select mask keeping only the first ``cutoff`` fields of a
+    block laid out over consecutive words (cutoff in [0, r])."""
+    fpw = 32 // bits
+    full = cutoff // fpw
+    rem = (cutoff - full * fpw).astype(jnp.uint32)
+    partial = (jnp.uint32(1) << (jnp.uint32(bits) * rem)) - jnp.uint32(1)
+    return jnp.where(
+        word_iota < full,
+        jnp.uint32(0xFFFFFFFF),
+        jnp.where(word_iota == full, partial, jnp.uint32(0)),
+    )
+
+
+def rank_packed_jnp(fused, block_idx, c, cutoff, *, bits: int, sigma: int):
+    """Pure-jnp popcount rank over the fused layout (CPU fallback).
+
+    fused int32[nb, sigma + W]; block_idx/c/cutoff int32[B].
+    Returns int32[B]: Occ checkpoint + count of c in the first ``cutoff``
+    symbols of the selected block.
+    """
+    rows = fused[block_idx]                                  # (B, sigma+W)
+    base = jnp.take_along_axis(rows, c[:, None], axis=1)[:, 0]
+    w = lax.bitcast_convert_type(rows[:, sigma:], jnp.uint32)  # (B, W)
+    rep = jnp.uint32(_REP[bits])
+    eq = _eq_fields(w ^ (c.astype(jnp.uint32) * rep)[:, None], bits)
+    wi = jnp.arange(w.shape[1], dtype=jnp.int32)[None, :]
+    sel = _cutoff_mask(wi, cutoff[:, None], bits)
+    cnt = jnp.sum(lax.population_count(eq & sel), axis=1)
+    return (base + cnt.astype(jnp.int32)).astype(jnp.int32)
+
+
+def _packed_kernel(bidx_ref, c_ref, cut_ref, fused_ref, out_ref,
+                   *, bits: int, sigma: int, queries_per_step: int):
+    i = pl.program_id(0)
+    wid = fused_ref.shape[1]
+    W = wid - sigma
+    rep = jnp.uint32(_REP[bits])
+
+    def body(q, acc):
+        g = i * queries_per_step + q
+        blk = bidx_ref[g]
+        c = c_ref[g]
+        cut = cut_ref[g]
+        row = fused_ref[pl.ds(blk, 1), :]                    # (1, sigma+W)
+        base = lax.dynamic_slice(row, (0, c), (1, 1))[0, 0]
+        w = lax.bitcast_convert_type(
+            lax.slice(row, (0, sigma), (1, wid)), jnp.uint32
+        )                                                    # (1, W)
+        eq = _eq_fields(w ^ c.astype(jnp.uint32) * rep, bits)
+        wi = lax.broadcasted_iota(jnp.int32, (1, W), 1)
+        sel = _cutoff_mask(wi, cut, bits)
+        cnt = jnp.sum(lax.population_count(eq & sel)).astype(jnp.int32)
+        return acc.at[q].set(base + cnt)
+
+    out_ref[:] = lax.fori_loop(
+        0, queries_per_step, body,
+        jnp.zeros((queries_per_step,), jnp.int32),
+    )
+
+
+def rank_packed_pallas(fused, block_idx, c, cutoff, *, bits: int, sigma: int,
+                       queries_per_step: int = 8, interpret: bool = False):
+    """Fused multi-query rank kernel over the packed layout.
+
+    The whole fused array lives in VMEM (packing makes it small); every grid
+    step answers ``queries_per_step`` queries, each gathering one fused row
+    (checkpoint base + packed words in a single access) and counting matches
+    via XOR + popcount.  B must be a multiple of queries_per_step (ops.py
+    pads).
+    """
+    B = block_idx.shape[0]
+    Q = queries_per_step
+    assert B % Q == 0, (B, Q)
+    nb, wid = fused.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B // Q,),
+        in_specs=[pl.BlockSpec((nb, wid), lambda i, b, c, t: (0, 0))],
+        out_specs=pl.BlockSpec((Q,), lambda i, b, c, t: (i,)),
+    )
+    kernel = functools.partial(
+        _packed_kernel, bits=bits, sigma=sigma, queries_per_step=Q
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B,), jnp.int32),
+        interpret=interpret,
+    )(block_idx, c, cutoff, fused)
+
+
+# ---------------------------------------------------------------------------
+# legacy unpacked path (sigma > 16): one query per grid step, scalar-prefetch
+# DMA of the selected int32 block.
+# ---------------------------------------------------------------------------
 
 
 def _kernel(block_idx_ref, c_ref, cutoff_ref, bwt_ref, out_ref):
@@ -26,7 +177,7 @@ def _kernel(block_idx_ref, c_ref, cutoff_ref, bwt_ref, out_ref):
 
 
 def rank_select_pallas(bwt_blocks, block_idx, c, cutoff, *, interpret=False):
-    """In-block counts for FM rank queries.
+    """In-block counts for FM rank queries over unpacked int32 blocks.
 
     bwt_blocks int32[nblocks, r]; block_idx/c/cutoff int32[B].
     Returns int32[B]: count of c among the first ``cutoff`` entries of the

@@ -50,3 +50,30 @@ def rank_select_ref(
     return jnp.sum(
         (blocks == c[:, None]) & (pos < cutoff[:, None]), axis=1
     ).astype(jnp.int32)
+
+
+def unpack_words(words: jax.Array, bits: int) -> jax.Array:
+    """int32[..., W] packed words -> int32[..., W * (32//bits)] symbols
+    (LSB-first field order — inverse of rank_select.pack_words)."""
+    fpw = 32 // bits
+    w = lax.bitcast_convert_type(words, jnp.uint32)[..., None]
+    shifts = jnp.arange(fpw, dtype=jnp.uint32) * jnp.uint32(bits)
+    fields = (w >> shifts) & jnp.uint32((1 << bits) - 1)
+    return fields.reshape(*words.shape[:-1], -1).astype(jnp.int32)
+
+
+def rank_packed_ref(fused, block_idx, c, cutoff, *, bits: int, sigma: int):
+    """Oracle for the packed fused layout: unpack the selected block back to
+    plain symbols and count the slow, obvious way (checkpoint base + scan).
+
+    fused int32[nb, sigma + W]: per-block [Occ checkpoint | packed words].
+    Deliberately shares no bit-twiddling with the production popcount path.
+    """
+    rows = fused[block_idx]                             # (B, sigma+W)
+    base = jnp.take_along_axis(rows, c[:, None], axis=1)[:, 0]
+    syms = unpack_words(rows[:, sigma:], bits)          # (B, r)
+    pos = jnp.arange(syms.shape[1], dtype=jnp.int32)[None, :]
+    inblock = jnp.sum(
+        (syms == c[:, None]) & (pos < cutoff[:, None]), axis=1
+    )
+    return (base + inblock).astype(jnp.int32)

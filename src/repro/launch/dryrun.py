@@ -224,12 +224,14 @@ def lower_index_cell(shape_kind: str, *, multi_pod: bool):
         jax.ShapeDtypeStruct((n // r, icfg.sigma), jnp.int32,
                              sharding=sharding(("parts", None))),
         jax.ShapeDtypeStruct((icfg.sigma,), jnp.int32, sharding=sharding((None,))),
-        jax.ShapeDtypeStruct((), jnp.int32),
+        # byte alphabet (sigma 257) exceeds the packable range -> unpacked
+        # layout with the replicated placeholder fused operand
+        jax.ShapeDtypeStruct((1, 1), jnp.int32, sharding=sharding((None, None))),
     )
     patterns = jax.ShapeDtypeStruct(
         (icfg.query_batch, icfg.query_len), jnp.int32, sharding=sharding((None, None)),
     )
-    aux = (r, icfg.sigma, n, parts)
+    aux = (r, icfg.sigma, n, parts, 0)
     lowered = _count_jit.lower(arrays, patterns, aux, mesh)
     meta = {"arch": "bwt_index", "shape": f"serve_b{icfg.query_batch}",
             "kind": "serve", "chips": parts, "tokens": icfg.query_batch,

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import shard_map
 from ..configs.base import ArchConfig
 from ..sharding import MeshContext, constrain
 from .common import ParamSpec, apply_rope, dense, rms_norm
@@ -473,7 +474,7 @@ def moe_block(p, x, cfg: ArchConfig, ctx: MeshContext):
         ep_sharded=espec is not None, fsdp_axes=fsdp_axes, ff_axes=ff_axes,
     )
     xt = x.reshape(B * S, d)
-    y = jax.shard_map(
+    y = shard_map(
         body,
         mesh=ctx.mesh,
         in_specs=(

@@ -20,6 +20,7 @@ import numpy as np  # noqa: E402
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.compat import shard_map  # noqa: E402
 from repro.core import alphabet as al  # noqa: E402
 from repro.core.dist_sort import (  # noqa: E402
     ShardInfo,
@@ -51,7 +52,7 @@ def make_mesh():
 
 def shard_call(mesh, fn, *arrays, out_specs=P(AXIS)):
     return jax.jit(
-        jax.shard_map(
+        shard_map(
             fn, mesh=mesh, in_specs=tuple(P(AXIS) for _ in arrays),
             out_specs=out_specs,
         )
@@ -237,6 +238,47 @@ def scenario_dist_fm():
     print("dist FM ok")
 
 
+def scenario_dist_locate():
+    """dist_count AND dist_locate agree with the single-device index built
+    over the same corpus, for both the packed and unpacked local layouts."""
+    from repro.core.dist_fm import build_dist_fm_index, dist_count, dist_locate
+    from repro.core.fm_index import PAD, build_fm_index, count, locate
+    from repro.core.suffix_array import suffix_array
+
+    mesh = make_mesh()
+    rng = np.random.default_rng(21)
+    r = 8
+    n = DEVICES * 8 * r
+    for sigma_hi, srate in [(5, 8), (17, 4)]:  # packed (4-bit) / unpacked
+        toks = rng.integers(1, sigma_hi, n - 1).astype(np.int32)
+        s = al.append_sentinel(toks)
+        sigma = al.sigma_of(s)
+        cfg = DistSAConfig(axis=AXIS, engine=BITONIC)
+        sa, bwt_arr, row = build_bwt_sharded(jnp.asarray(s), mesh, cfg,
+                                             sigma=sigma)
+        idx = build_dist_fm_index(bwt_arr, row, mesh, sigma=sigma,
+                                  sample_rate=r, sa=sa, sa_sample_rate=srate)
+        sa1 = suffix_array(jnp.asarray(s), sigma)
+        fm = build_fm_index(jnp.asarray(np.asarray(bwt_arr)), row, sigma, r,
+                            sa=sa1, sa_sample_rate=srate)
+        expected_bits = 4 if sigma <= 16 else 0
+        assert idx.bits == expected_bits == fm.bits, (idx.bits, fm.bits)
+        B, L = 12, 6
+        pats = np.full((B, L), PAD, np.int32)
+        lens = rng.integers(1, L + 1, B)
+        for b in range(B):
+            pats[b, : lens[b]] = rng.integers(1, sigma_hi, lens[b])
+        got = np.asarray(dist_count(idx, jnp.asarray(pats), mesh))
+        want = np.asarray(count(fm, jnp.asarray(pats)))
+        assert np.array_equal(got, want), (sigma, got, want)
+        k = 32
+        dpos, dcnt = dist_locate(idx, jnp.asarray(pats), k, mesh)
+        spos, scnt = locate(fm, jnp.asarray(pats), k)
+        assert np.array_equal(np.asarray(dcnt), np.asarray(scnt)), sigma
+        assert np.array_equal(np.asarray(dpos), np.asarray(spos)), sigma
+    print("dist locate ok")
+
+
 def scenario_pipeline():
     from repro.core.pipeline import build_index
     from repro.core.fm_index import PAD, count_naive
@@ -310,6 +352,7 @@ SCENARIOS = {
     "sa_bitonic": scenario_sa_bitonic,
     "sa_samplesort": scenario_sa_samplesort,
     "dist_fm": scenario_dist_fm,
+    "dist_locate": scenario_dist_locate,
 }
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ SCENARIOS = [
     "sa_bitonic",
     "sa_samplesort",
     "dist_fm",
+    "dist_locate",
     "pipeline",
     "elastic",
 ]
