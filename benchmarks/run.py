@@ -2,8 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (plus per-bench headers).
 
-  table2     paper Table 2 — ours vs Menon et al. competitor (wall time)
-  sortbench  DESIGN.md §4 sort-engine ablation (collective volume, derived)
+  table2     paper Table 2 — ours vs Menon et al. competitor (wall time),
+             plus fast-vs-seed build speedup; writes BENCH_build.json
+  buildjson  machine-readable build trajectory from BENCH_build.json
+  sortbench  DESIGN.md §4 sort-engine ablation (collective volume, derived;
+             fused-key and radix local-sort variants)
   fmbench    FM-index serving throughput + rank_select kernel
   roofline   index-build + LM roofline terms (from dry-run JSONs, if present)
 """
@@ -37,10 +40,29 @@ def _roofline_section():
         )
 
 
+def _build_json_section():
+    from .table2_bwt import DEFAULT_JSON
+
+    if not os.path.exists(DEFAULT_JSON):
+        print("buildjson,none,0,table2 writes it")
+        return
+    with open(DEFAULT_JSON) as fh:
+        payload = json.load(fh)
+    print("buildjson,input,ours_s,build_speedup,rounds;skipped;active_frac0")
+    for r in payload.get("rows", []):
+        frac0 = r["active_frac"][0] if r["active_frac"] else 0.0
+        print(
+            f"buildjson,{r['input']},{r['ours_s']:.4f},"
+            f"{r['build_speedup']:.2f},"
+            f"{r['rounds_executed']};{r['rounds_skipped']};{frac0:.4f}"
+        )
+
+
 def main() -> None:
     from . import fm_query_bench, sort_bench, table2_bwt
 
-    table2_bwt.main()
+    table2_bwt.main([])
+    _build_json_section()
     sort_bench.main()
     fm_query_bench.main([])
     _roofline_section()

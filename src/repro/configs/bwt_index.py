@@ -17,6 +17,12 @@ class BWTIndexConfig:
     sigma: int = 257              # byte alphabet + sentinel
     engine: str = "samplesort"    # paper-faithful range shuffle by default
     capacity_factor: float = 2.0
+    # build-engine knobs (PR 2): fused keys are always on; these gate the
+    # packed q-gram init, active-suffix discarding, and the local sort
+    qgram: bool = True            # rank by q packed chars, start at h=q
+    qgram_words: int = 2          # uint32 words per init key (64-bit logical)
+    discard: bool = True          # drop unique-rank suffixes from the loop
+    local_sort: str = "auto"      # "compare" | "radix" | "auto" (radix on TPU)
     sample_rate: int = 64         # FM Occ checkpoint spacing
     query_batch: int = 1024
     query_len: int = 32

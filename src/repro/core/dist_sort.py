@@ -17,8 +17,23 @@ Spark-shuffle equivalents from DESIGN.md §4:
   "Shifting" map (rank[i + h]) with two neighbour ppermutes.
 
 All collective permutations use static perms (ppermute requirement); the
-prefix-doubling driver therefore unrolls over ``h`` (h is a power of two,
+prefix-doubling driver therefore unrolls over ``h`` (h is a static integer,
 known per round).
+
+Fused-key layout (PR 2): the doubling driver packs each (rank, rank[i+h])
+pair into 1-2 **uint32 key words** (``core.keypack``), so both engines sort
+one or two unsigned key operands plus an int32 index payload instead of
+three int32 operands.  Consequences handled here:
+
+* pads are per-dtype (``pad_value``) instead of the signed ``INT_PAD``, and
+  a key word may legitimately saturate its field (packed q-gram keys), so
+  the samplesort recombine step breaks pad/real ties on a validity key;
+* local sorts dispatch through ``local_sort``/``key_bits`` to either
+  ``lax.sort`` or the Pallas LSD radix engine (``kernels.ops.radix_sort``);
+* ``samplesort_sharded`` takes ``n_valid_in`` so the discarding driver can
+  mark already-unique suffixes as pad slots — they are excluded from
+  sampling and never enter the all_to_all, shrinking shuffle traffic with
+  the active fraction.
 """
 
 from __future__ import annotations
@@ -29,7 +44,18 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-INT_PAD = jnp.iinfo(jnp.int32).max  # pad key that sorts after every real key
+# COMPARE/RADIX and the local-sort dispatch (lax.sort vs the LSD radix
+# pipeline over key_bits significant bits) live in kernels.ops — one
+# implementation shared with the single-device builder
+from ..kernels import ops as kernel_ops
+from ..kernels.ops import COMPARE, RADIX  # noqa: F401  (re-export)
+
+
+def pad_value(dtype) -> int:
+    """Largest value of ``dtype`` — the pad key for unsigned/signed sorts.
+    (The seed's signed int32 ``INT_PAD`` is this for int32; uint32 key
+    words need 0xFFFFFFFF, which int32 comparison would order *first*.)"""
+    return int(jnp.iinfo(jnp.dtype(dtype)).max)
 
 
 class ShardInfo(NamedTuple):
@@ -117,26 +143,29 @@ def _merge_split(
     j: int,
     keep_low: jax.Array,
     is_lower: jax.Array,
+    engine: str,
+    key_bits,
 ):
     """Exchange full shards with partner ``me ^ j``; keep low or high half of
-    the merged 2m block.  ``lax.sort`` with multiple key operands gives the
-    lexicographic order (avoids int64 key packing, which TPUs dislike).
+    the merged 2m block.  Multiple key operands give the lexicographic order
+    (avoids int64 key packing, which TPUs dislike — fused uint32 words from
+    ``core.keypack`` arrive here as separate operands).
 
-    Both partners must sort the SAME sequence: lax.sort is stable, so with
-    tied keys the payload order depends on concatenation order.  Canonical
-    order = lower device's shard first on both sides, which makes the kept
-    halves exactly complementary."""
+    Both partners must sort the SAME sequence: both local engines are
+    stable, so with tied keys the payload order depends on concatenation
+    order.  Canonical order = lower device's shard first on both sides,
+    which makes the kept halves exactly complementary."""
     m = info.part_size
     perm = [(i, i ^ j) for i in range(info.parts)]
     received = tuple(lax.ppermute(x, info.axis, perm) for x in operands)
-    merged = lax.sort(
+    merged = kernel_ops.local_sort(
         tuple(
             jnp.concatenate(
                 [jnp.where(is_lower, a, b), jnp.where(is_lower, b, a)]
             )
             for a, b in zip(operands, received)
         ),
-        num_keys=num_keys,
+        num_keys, engine=engine, key_bits=key_bits,
     )
     start = jnp.where(keep_low, 0, m)
     return tuple(lax.dynamic_slice_in_dim(x, start, m) for x in merged)
@@ -146,6 +175,9 @@ def bitonic_sort_sharded(
     info: ShardInfo,
     operands: Sequence[jax.Array],
     num_keys: int = 1,
+    *,
+    local_sort: str = COMPARE,
+    key_bits=None,
 ) -> tuple[jax.Array, ...]:
     """Globally sort sharded arrays lexicographically by the first
     ``num_keys`` operands; remaining operands are payloads carried along.
@@ -156,7 +188,8 @@ def bitonic_sort_sharded(
     P = info.parts
     if P & (P - 1):
         raise ValueError(f"bitonic engine needs power-of-two parts, got {P}")
-    operands = lax.sort(tuple(operands), num_keys=num_keys)
+    operands = kernel_ops.local_sort(operands, num_keys, engine=local_sort,
+                                     key_bits=key_bits)
     me = _me(info)
     k = 2
     while k <= P:
@@ -167,7 +200,8 @@ def bitonic_sort_sharded(
             is_lower = me < partner
             keep_low = is_lower == ascending
             operands = _merge_split(
-                info, operands, num_keys, j, keep_low, is_lower
+                info, operands, num_keys, j, keep_low, is_lower,
+                local_sort, key_bits,
             )
             j //= 2
         k *= 2
@@ -175,12 +209,16 @@ def bitonic_sort_sharded(
 
 
 def scatter_to_index_bitonic(
-    info: ShardInfo, gidx: jax.Array, values: tuple[jax.Array, ...]
+    info: ShardInfo, gidx: jax.Array, values: tuple[jax.Array, ...],
+    *, local_sort: str = COMPARE,
 ) -> tuple[jax.Array, ...]:
     """Route (gidx, values) so device d ends up with values for global
     indices [d*m, (d+1)*m) in order.  ``gidx`` must be a permutation of
     0..n-1, hence sorting by it is a deterministic all-to-all."""
-    sorted_ops = bitonic_sort_sharded(info, (gidx, *values), num_keys=1)
+    kb = (max(1, info.n - 1).bit_length(),)
+    sorted_ops = bitonic_sort_sharded(
+        info, (gidx, *values), num_keys=1, local_sort=local_sort, key_bits=kb
+    )
     return sorted_ops[1:]
 
 
@@ -243,6 +281,11 @@ def samplesort_sharded(
     operands: Sequence[jax.Array],
     num_keys: int = 1,
     capacity_factor: float = 2.0,
+    *,
+    key_pads: Sequence[int] | None = None,
+    n_valid_in: jax.Array | None = None,
+    local_sort: str = COMPARE,
+    key_bits=None,
 ) -> SampleSortResult:
     """Paper's range-partitioned sort: sample splitters, range-shuffle via
     capacity-bounded all_to_all, sort locally.
@@ -252,17 +295,34 @@ def samplesort_sharded(
     Capacity per (src, dst) bucket is ``ceil(capacity_factor * m / P)``;
     overflow sets the flag (driver retries with larger factor — the explicit
     version of Spark's skew handling).
+
+    ``key_pads`` is the per-key pad value (defaults to the dtype max; fused
+    uint32 key words pass their field-limited pad from ``core.keypack``).  A
+    real key may equal the pad (saturated q-gram fields), so the recombine
+    sort breaks ties on a validity key — valid slots always sort first.
+
+    ``n_valid_in`` (per-device count; requires the caller to have set the
+    trailing/inactive slots to ``key_pads``) restricts splitter sampling to
+    valid slots and **excludes pad slots from the shuffle entirely** — with
+    active-suffix discarding the all_to_all volume shrinks with the active
+    fraction instead of staying O(m).
     """
     P, m = info.parts, info.part_size
     operands = tuple(operands)
-    keys = operands[:num_keys]
+    if key_pads is None:
+        key_pads = tuple(pad_value(k.dtype) for k in operands[:num_keys])
 
-    # 1. local sort
-    ops = lax.sort(operands, num_keys=num_keys)
+    # 1. local sort (stable engines; caller's pad slots go last)
+    ops = kernel_ops.local_sort(operands, num_keys, engine=local_sort,
+                                key_bits=key_bits)
     keys_s = ops[:num_keys]
+    m_valid = jnp.int32(m) if n_valid_in is None else n_valid_in.astype(jnp.int32)
 
-    # 2. regular sampling: P-1 local samples -> all_gather -> global splitters
-    sample_pos = ((jnp.arange(1, P, dtype=jnp.int32)) * m) // P
+    # 2. regular sampling over the valid prefix: P-1 local samples ->
+    # all_gather -> global splitters.  (A device with few/no valid slots
+    # contributes pad samples; that only skews splitters, and any resulting
+    # imbalance is caught by the capacity overflow flag.)
+    sample_pos = ((jnp.arange(1, P, dtype=jnp.int32)) * m_valid) // P
     local_samples = tuple(k[sample_pos] for k in keys_s)
     gathered = tuple(
         lax.all_gather(s, info.axis).reshape(-1) for s in local_samples
@@ -272,10 +332,11 @@ def samplesort_sharded(
     spl_pos = (jnp.arange(1, P, dtype=jnp.int32) * (P * (P - 1))) // P
     splitters = tuple(g[spl_pos] for g in gsorted)
 
-    # 3. bucket boundaries in the local sorted run (binary search per splitter)
-    bounds = _lex_searchsorted(keys_s, splitters)          # (P-1,)
+    # 3. bucket boundaries in the local sorted run (binary search per
+    # splitter); pad slots sit past m_valid and are never sent
+    bounds = jnp.minimum(_lex_searchsorted(keys_s, splitters), m_valid)
     starts = jnp.concatenate([jnp.zeros(1, jnp.int32), bounds])
-    ends = jnp.concatenate([bounds, jnp.full((1,), m, jnp.int32)])
+    ends = jnp.concatenate([bounds, m_valid[None]])
     counts = ends - starts                                  # (P,) per-dst
 
     cap = max(1, int(-(-capacity_factor * m // P)))
@@ -294,25 +355,34 @@ def samplesort_sharded(
         ).reshape(P, cap, *buf.shape[2:])
 
     def shuffle(x, pad):  # x: (m, ...) local sorted operand
-        return exchange(jnp.where(valid_send, x[take], pad))
+        return exchange(jnp.where(valid_send, x[take], jnp.asarray(pad, x.dtype)))
 
     recv = tuple(
-        shuffle(x, INT_PAD if i < num_keys else 0)
+        shuffle(x, key_pads[i] if i < num_keys else 0)
         for i, x in enumerate(ops)
     )
     recv_valid = exchange(valid_send.astype(jnp.int32)).astype(bool)
 
-    # 5. local sort of received slots; pads (INT_PAD keys) go to the end
+    # 5. local sort of received slots; pads go to the end.  Validity is a
+    # tie-break key after the real keys: a real key equal to its pad value
+    # still sorts before the pad slots.
     flat = tuple(r.reshape(P * cap, *r.shape[2:]) for r in recv)
     vmask = recv_valid.reshape(P * cap)
-    # force invalid slots to INT_PAD on ALL keys so they sort last together
+    # force invalid slots to the pad on ALL keys so they sort last together
     flat = tuple(
-        jnp.where(vmask, x, INT_PAD) if i < num_keys else x
+        jnp.where(vmask, x, jnp.asarray(key_pads[i], x.dtype))
+        if i < num_keys else x
         for i, x in enumerate(flat)
     )
-    final = lax.sort((*flat, vmask.astype(jnp.int32)), num_keys=num_keys)
+    inv = (~vmask).astype(jnp.int32)
+    tb_bits = None if key_bits is None else (*tuple(key_bits), 1)
+    final = kernel_ops.local_sort(
+        (*flat[:num_keys], inv, *flat[num_keys:]),
+        num_keys + 1, engine=local_sort, key_bits=tb_bits,
+    )
+    final = (*final[:num_keys], *final[num_keys + 1:])
     n_valid = jnp.sum(vmask.astype(jnp.int32))
-    return SampleSortResult(final[:-1], n_valid, lax.pmax(overflow, info.axis))
+    return SampleSortResult(final, n_valid, lax.pmax(overflow, info.axis))
 
 
 def scatter_to_index_samplesort(

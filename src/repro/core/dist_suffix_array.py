@@ -1,18 +1,37 @@
 """Distributed prefix-doubling suffix array + BWT (the paper's contribution).
 
-The Spark pipeline of §2.2 mapped onto a TPU mesh axis (DESIGN.md §2):
+The Spark pipeline of §2.2 mapped onto a TPU mesh axis (DESIGN.md §2), with
+the PR-2 build-engine optimisations (fused keys / q-gram init / discarding):
 
-    Init       histogram via psum + exclusive cumsum (Occ), local rank lookup
+    Init       packed q-gram ranking: the first q = words * floor(32/ceil
+               (log2 sigma)) characters of every suffix packed into 1-2
+               uint32 words (q ppermute shifts), one distributed sort, and
+               a grouped re-rank — replaces the seed's single-char Occ init
+               AND the first ceil(log2 q) doubling rounds (3-5 rounds on
+               the paper's corpora; single-device builds measure 2.3-2.6x
+               end-to-end vs the seed on CPU).  The seed histogram init
+               (`dist_initial_ranks`) remains behind ``qgram=False``.
     Shift      ``shift_sharded`` (two static ppermutes instead of a keyed join)
-    Pair+Sort  distributed sort of (rank, rank[i+h]) with index payload
-               — engine 'bitonic' (deterministic) or 'samplesort' (the
-               paper's range shuffle)
-    Re-rank    boundary halo + local prefix-max + distributed exclusive max
-    Scatter    route new ranks back to index order (sort-by-permutation or
-               capacity-bounded all_to_all)
-    Iterate    h <- 2h, unrolled (static ppermute perms), each round guarded
-               by ``lax.cond`` on the all-distinct flag so converged inputs
-               skip the collective work.
+    Pair+Sort  each (rank, rank[i+h]) pair packs into one fused uint32 key
+               word (two for n > 65535; ``core.keypack``), so the engines
+               move one or two uint32 keys + an int32 index instead of three
+               int32 operands — engine 'bitonic' (deterministic) or
+               'samplesort' (the paper's range shuffle); local sorts
+               dispatch to lax.sort or the Pallas LSD radix engine
+               (``local_sort`` knob).
+    Re-rank    grouped form: new_rank = rank + (pair-run head - rank-run
+               head), boundary halos + local prefix-max + distributed
+               exclusive max.  Identical to the paper's head-position rank
+               when every suffix is active, and correct under discarding.
+    Discard    a suffix whose rank is unique never re-sorts: its key becomes
+               a pad, samplesort's capacity-bounded all_to_all skips pad
+               slots entirely (shuffle volume tracks the active fraction;
+               the bitonic engine keeps fixed buffers and gains nothing),
+               and re-ranking touches only the shrinking active set.
+    Scatter    route new ranks + active flags back to index order
+               (sort-by-permutation or capacity-bounded all_to_all)
+    Iterate    h <- q, 2q, 4q, ... unrolled (static ppermute perms), each
+               round guarded by ``lax.cond`` on the no-actives-left flag.
 
 Everything here runs INSIDE ``shard_map``; ``build_isa_sharded`` /
 ``build_bwt_sharded`` are the jit-able host-level entry points.  The
@@ -33,6 +52,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 
+from . import keypack
 from .dist_sort import (
     ShardInfo,
     bitonic_sort_sharded,
@@ -43,7 +63,7 @@ from .dist_sort import (
     scatter_to_index_samplesort,
     shift_sharded,
 )
-from .suffix_array import OVERFLOW_RANK
+from .suffix_array import OVERFLOW_RANK, resolve_local_sort
 
 BITONIC = "bitonic"
 SAMPLESORT = "samplesort"
@@ -53,7 +73,11 @@ class DistSAConfig(NamedTuple):
     axis: str = "parts"
     engine: str = BITONIC
     capacity_factor: float = 2.0   # samplesort bucket slack (Spark skew knob)
-    rounds: int | None = None      # default ceil(log2 n)
+    rounds: int | None = None      # default ceil(log2 (n / h0))
+    qgram: bool = True             # packed q-gram init (False: seed Occ init)
+    qgram_words: int = 2           # uint32 words per init key (64-bit logical)
+    discard: bool = True           # drop unique-rank suffixes from the loop
+    local_sort: str = "auto"       # "compare" | "radix" | "auto" (radix on TPU)
 
 
 def _gidx(info: ShardInfo) -> jax.Array:
@@ -62,109 +86,289 @@ def _gidx(info: ShardInfo) -> jax.Array:
     )
 
 
-def dist_initial_ranks(info: ShardInfo, s_local: jax.Array, sigma: int) -> jax.Array:
-    """Paper's Init: global char histogram (map/reduce == psum of local
-    bincounts), exclusive cumsum = Occ, local lookup."""
+def dist_initial_ranks(info: ShardInfo, s_local: jax.Array, sigma: int):
+    """Seed Init: global char histogram (map/reduce == psum of local
+    bincounts), exclusive cumsum = Occ, local lookup.  Also returns the
+    active flags (char occurs more than once) for the discarding loop."""
     counts = lax.psum(jnp.bincount(s_local, length=sigma), info.axis)
     occ = jnp.cumsum(counts) - counts
-    return occ[s_local].astype(jnp.int32)
+    return occ[s_local].astype(jnp.int32), counts[s_local] > 1
 
 
 def dist_rerank(
     info: ShardInfo,
-    r1s: jax.Array,
-    r2s: jax.Array,
+    cols,
     n_valid: jax.Array,
+    *,
+    grouped: bool = False,
+    want_active: bool = False,
 ):
-    """Paper's Re-Ranking on the globally sorted pair sequence.
+    """Paper's Re-Ranking on the globally sorted (active) sequence.
 
-    Valid slots are a prefix of each local shard (engines guarantee this);
-    global position of local valid slot p = (# valid on earlier devices) + p.
-    Returns (ranks_for_valid_slots, all_distinct).
+    ``cols`` is a tuple of same-dtype sorted column arrays whose valid
+    slots form a prefix of each local shard (engines guarantee this);
+    global position of local valid slot p = (# valid on earlier devices)
+    + p.  Group heads are found with a one-element halo from the previous
+    non-empty device.
+
+    * ``grouped=False``: rank = global head position of the equal-group —
+      the paper's re-rank, used for the init sort.
+    * ``grouped=True`` (``cols = (rank, rank2)``): rank = cols[0] +
+      (pair-run head pos - rank-run head pos).  Because every rank is the
+      head position of its rank-group (invariant of both inits, preserved
+      here) and any group of size >= 2 is entirely active and contiguous in
+      the sorted active sequence, this equals the head position the full
+      re-rank would assign — while only ever looking at active suffixes.
+    * ``want_active``: additionally return "my pair-group has size >= 2"
+      flags (needs a successor halo: the first valid pair of the next
+      non-empty device).
+
+    Returns ``(ranks, active)``; ``active`` is None unless requested.
     """
-    slots = r1s.shape[0]
+    cols = tuple(cols)
+    slots = cols[0].shape[0]
     pos = jnp.arange(slots, dtype=jnp.int32)
     valid = pos < n_valid
     offset = exclusive_scan_sharded(info, n_valid)
     gpos = offset + pos
 
-    # previous device's last valid pair (halo for the boundary comparison)
+    # previous device's last valid tuple (halo for the boundary comparison)
     has_any = n_valid > 0
     last = jnp.maximum(n_valid - 1, 0)
-    lastk = jnp.stack([r1s[last], r2s[last]])
-    g_last = lax.all_gather(lastk, info.axis)          # (P, 2)
+    lastk = jnp.stack([c[last] for c in cols])
+    g_last = lax.all_gather(lastk, info.axis)          # (P, K)
     g_has = lax.all_gather(has_any, info.axis)         # (P,)
     me = lax.axis_index(info.axis)
     jidx = jnp.arange(info.parts)
     prev_mask = (jidx < me) & g_has
     prev_exists = jnp.any(prev_mask)
     prev_j = jnp.argmax(jnp.where(prev_mask, jidx, -1))
-    prev_k = g_last[prev_j]                            # (2,)
+    prev_k = g_last[prev_j]                            # (K,)
 
-    prev1 = jnp.concatenate([prev_k[:1], r1s[:-1]])
-    prev2 = jnp.concatenate([prev_k[1:], r2s[:-1]])
-    neq = (r1s != prev1) | (r2s != prev2)
+    prevs = [
+        jnp.concatenate([prev_k[i][None], c[:-1]]) for i, c in enumerate(cols)
+    ]
+    neq0 = cols[0] != prevs[0]
+    neq_pair = neq0
+    for c, pv in zip(cols[1:], prevs[1:]):
+        neq_pair = neq_pair | (c != pv)
     # first global element has no predecessor -> always a group head
-    neq = neq.at[0].set(jnp.where(prev_exists, neq[0], True))
+    neq0 = neq0.at[0].set(jnp.where(prev_exists, neq0[0], True))
+    neq_pair = neq_pair.at[0].set(jnp.where(prev_exists, neq_pair[0], True))
 
-    heads = jnp.where(valid & neq, gpos, -1)
-    local_scan = lax.associative_scan(jnp.maximum, heads)
-    carry = exclusive_max_sharded(info, local_scan[-1], identity=-1)
-    ranks = jnp.maximum(local_scan, carry)
+    def head_pos(heads):
+        local = lax.associative_scan(jnp.maximum, jnp.where(heads, gpos, -1))
+        carry = exclusive_max_sharded(info, local[-1], identity=-1)
+        return jnp.maximum(local, carry)
 
-    n = info.n
-    distinct = lax.psum(jnp.sum((valid & neq).astype(jnp.int32)), info.axis)
-    return ranks.astype(jnp.int32), distinct == n
+    pair_head = valid & neq_pair
+    pair_pos = head_pos(pair_head)
+    if grouped:
+        col0_pos = head_pos(valid & neq0)
+        ranks = (cols[0].astype(jnp.int32) + (pair_pos - col0_pos)).astype(
+            jnp.int32
+        )
+    else:
+        ranks = pair_pos.astype(jnp.int32)
+    if not want_active:
+        return ranks, None
+
+    # successor halo: first valid tuple of the next non-empty device
+    firstk = jnp.stack([c[0] for c in cols])
+    g_first = lax.all_gather(firstk, info.axis)        # (P, K)
+    next_mask = (jidx > me) & g_has
+    next_j = jnp.argmax(next_mask)                     # first True (or 0)
+    next_k = g_first[next_j]
+
+    total = lax.psum(n_valid, info.axis)
+    in_shard = pos + 1 < n_valid
+    neq_succ = jnp.zeros(slots, bool)
+    for i, c in enumerate(cols):
+        succ = jnp.where(in_shard, jnp.roll(c, -1), next_k[i])
+        neq_succ = neq_succ | (c != succ)
+    is_glast = gpos == total - 1                       # no successor at all
+    active = valid & ~(pair_head & (neq_succ | is_glast))
+    return ranks, active
 
 
-def _doubling_round(info: ShardInfo, cfg: DistSAConfig, h: int, rank, gidx):
-    """One prefix-doubling round; returns (new_rank, all_distinct)."""
-    r2 = shift_sharded(info, rank, h, OVERFLOW_RANK)
+def dist_qgram_init(info: ShardInfo, cfg: DistSAConfig, eng: str,
+                    s_local: jax.Array, sigma: int):
+    """Packed q-gram init: rank every suffix by its first q characters in
+    one distributed sort.  Returns (rank, active, q, overflow)."""
+    q, fpw, bits = keypack.qgram_params(sigma, cfg.qgram_words)
+    m = info.part_size
+    if q - 1 <= m:
+        # all q windows are local given a (q-1)-char halo from the next
+        # device: ONE small ppermute instead of q-1 full-shard shifts
+        if q > 1:
+            perm = [(i, (i - 1) % info.parts) for i in range(info.parts)]
+            halo = lax.ppermute(s_local[: q - 1], info.axis, perm)
+            # past the global end the window reuses the sentinel value 0
+            halo = jnp.where(
+                lax.axis_index(info.axis) == info.parts - 1, 0, halo
+            )
+            ext = jnp.concatenate([s_local, halo])
+        else:
+            ext = s_local
+        chars = [ext[j: j + m] for j in range(q)]
+    else:
+        # tiny shards (m < q - 1): fall back to iterated distributed shifts
+        chars = [s_local]
+        for _ in range(q - 1):
+            chars.append(shift_sharded(info, chars[-1], 1, 0))
+    words = []
+    for w in range(cfg.qgram_words):
+        v = jnp.zeros_like(s_local, dtype=jnp.uint32)
+        for j in range(w * fpw, (w + 1) * fpw):
+            v = (v << bits) | chars[j].astype(jnp.uint32)
+        words.append(v)
+    gidx = _gidx(info)
+    nw = cfg.qgram_words
+    kb = (min(32, fpw * bits),) * nw
 
     if cfg.engine == BITONIC:
-        r1s, r2s, idxs = bitonic_sort_sharded(info, (rank, r2, gidx), num_keys=2)
-        n_valid = jnp.int32(info.part_size)
-        new_sorted, done = dist_rerank(info, r1s, r2s, n_valid)
-        (new_rank,) = scatter_to_index_bitonic(info, idxs, (new_sorted,))
-        return new_rank, done
+        sorted_ops = bitonic_sort_sharded(
+            info, (*words, gidx), num_keys=nw, local_sort=eng, key_bits=kb
+        )
+        ranks_s, active_s = dist_rerank(
+            info, sorted_ops[:nw], jnp.int32(info.part_size),
+            grouped=False, want_active=True,
+        )
+        rank, act = scatter_to_index_bitonic(
+            info, sorted_ops[nw], (ranks_s, active_s.astype(jnp.int32)),
+            local_sort=eng,
+        )
+        return rank, act.astype(bool), q, jnp.asarray(False)
 
+    pads = (keypack.qgram_pad(fpw, bits),) * nw
     res = samplesort_sharded(
-        info, (rank, r2, gidx), num_keys=2, capacity_factor=cfg.capacity_factor
+        info, (*words, gidx), num_keys=nw,
+        capacity_factor=cfg.capacity_factor, key_pads=pads,
+        local_sort=eng, key_bits=kb,
     )
-    r1s, r2s, idxs = res.operands
-    new_sorted, done = dist_rerank(info, r1s, r2s, res.n_valid)
-    pos = jnp.arange(r1s.shape[0], dtype=jnp.int32)
-    (new_rank,), overflow2 = scatter_to_index_samplesort(
-        info, idxs, (new_sorted,), valid=pos < res.n_valid,
-        capacity_factor=cfg.capacity_factor,
+    ranks_s, active_s = dist_rerank(
+        info, res.operands[:nw], res.n_valid, grouped=False, want_active=True
     )
+    pos = jnp.arange(res.operands[0].shape[0], dtype=jnp.int32)
+    (rank, act), ovf = scatter_to_index_samplesort(
+        info, res.operands[nw], (ranks_s, active_s.astype(jnp.int32)),
+        valid=pos < res.n_valid, capacity_factor=cfg.capacity_factor,
+    )
+    bad = res.overflow | ovf
+    rank = jnp.where(bad, jnp.int32(-2), rank)
+    return rank, act.astype(bool), q, bad
+
+
+def _doubling_round(info: ShardInfo, cfg: DistSAConfig, eng: str,
+                    spec: keypack.PairSpec, h: int, rank, gidx, active):
+    """One fused-key prefix-doubling round over the active suffixes;
+    returns (new_rank, new_active, done)."""
+    r2 = shift_sharded(info, rank, h, OVERFLOW_RANK)
+    words = keypack.pack_pairs(rank, r2, spec)
+    pads = spec.pad_words()
+    kb = spec.key_bits
+    W = spec.words
+    if cfg.discard:
+        # unique-rank suffixes become pad slots: they sort last and (with
+        # samplesort) never enter the all_to_all
+        words = tuple(
+            jnp.where(active, w, jnp.uint32(p)) for w, p in zip(words, pads)
+        )
+
+    if cfg.engine == BITONIC:
+        sorted_ops = bitonic_sort_sharded(
+            info, (*words, gidx), num_keys=W, local_sort=eng, key_bits=kb
+        )
+        r1s, r2s = keypack.unpack_pairs(sorted_ops[:W], spec)
+        idxs = sorted_ops[W]
+        if cfg.discard:
+            # pads sort after every real pair key, so the global active
+            # prefix maps to per-device valid prefixes
+            n_act = lax.psum(jnp.sum(active.astype(jnp.int32)), info.axis)
+            me = lax.axis_index(info.axis)
+            n_valid = jnp.clip(
+                n_act - me * info.part_size, 0, info.part_size
+            ).astype(jnp.int32)
+        else:
+            n_valid = jnp.int32(info.part_size)
+        ranks_s, active_s = dist_rerank(
+            info, (r1s, r2s), n_valid, grouped=True, want_active=True
+        )
+        pos = jnp.arange(r1s.shape[0], dtype=jnp.int32)
+        valid_s = pos < n_valid
+        vr = jnp.where(valid_s, ranks_s, 0)
+        va = jnp.where(valid_s, 1 + active_s.astype(jnp.int32), 0)
+        nr, na = scatter_to_index_bitonic(info, idxs, (vr, va), local_sort=eng)
+        bad = jnp.asarray(False)
+    else:
+        n_valid_in = (
+            jnp.sum(active.astype(jnp.int32)) if cfg.discard else None
+        )
+        res = samplesort_sharded(
+            info, (*words, gidx), num_keys=W,
+            capacity_factor=cfg.capacity_factor, key_pads=pads,
+            n_valid_in=n_valid_in, local_sort=eng, key_bits=kb,
+        )
+        r1s, r2s = keypack.unpack_pairs(res.operands[:W], spec)
+        idxs = res.operands[W]
+        ranks_s, active_s = dist_rerank(
+            info, (r1s, r2s), res.n_valid, grouped=True, want_active=True
+        )
+        pos = jnp.arange(r1s.shape[0], dtype=jnp.int32)
+        valid_s = pos < res.n_valid
+        vr = jnp.where(valid_s, ranks_s, 0)
+        va = jnp.where(valid_s, 1 + active_s.astype(jnp.int32), 0)
+        (nr, na), ovf = scatter_to_index_samplesort(
+            info, idxs, (vr, va), valid=valid_s,
+            capacity_factor=cfg.capacity_factor,
+        )
+        bad = res.overflow | ovf
+
+    # va encodes per-index outcome: 0 untouched (stays final), 1 became
+    # unique, 2 still ambiguous
+    new_rank = jnp.where(na > 0, nr, rank)
+    new_active = jnp.where(na > 0, na == 2, active)
     # overflow poisons the result with a recognizable sentinel; the host
     # driver checks ``isa_overflowed`` and retries with a larger factor
-    bad = res.overflow | overflow2
     new_rank = jnp.where(bad, jnp.int32(-2), new_rank)
-    return new_rank, done | bad
+    remaining = lax.psum(jnp.sum(new_active.astype(jnp.int32)), info.axis)
+    return new_rank, new_active, (remaining == 0) | bad
 
 
-def num_rounds(n: int) -> int:
-    return max(1, math.ceil(math.log2(max(2, n))))
+def num_rounds(n: int, h0: int = 1) -> int:
+    """Doubling rounds to cover length n starting from pairing distance
+    h0: smallest r with h0 * 2^r >= n."""
+    if n <= max(1, h0):
+        return 0
+    return max(1, math.ceil(math.log2(n / h0)))
 
 
 def dist_isa_local(
     info: ShardInfo, cfg: DistSAConfig, s_local: jax.Array, sigma: int
 ) -> jax.Array:
     """shard_map body: local shard of S -> local shard of the ISA."""
-    rank = dist_initial_ranks(info, s_local, sigma)
+    if cfg.qgram and info.n > 1:
+        eng = resolve_local_sort(cfg.local_sort)
+        rank, active, h0, bad = dist_qgram_init(info, cfg, eng, s_local, sigma)
+    else:
+        eng = resolve_local_sort(cfg.local_sort)
+        rank, active = dist_initial_ranks(info, s_local, sigma)
+        h0, bad = 1, jnp.asarray(False)
     gidx = _gidx(info)
-    done = jnp.asarray(info.n <= 1)
-    rounds = cfg.rounds if cfg.rounds is not None else num_rounds(info.n)
+    spec = keypack.pair_spec(info.n)
+    remaining = lax.psum(jnp.sum(active.astype(jnp.int32)), info.axis)
+    done = jnp.asarray(info.n <= 1) | (remaining == 0) | bad
+    rounds = cfg.rounds if cfg.rounds is not None else num_rounds(info.n, h0)
     for r in range(rounds):
-        h = 2 ** r
+        h = h0 * (2 ** r)
 
-        def do(args):
-            rank, _ = args
-            return _doubling_round(info, cfg, h, rank, gidx)
+        def do(args, h=h):
+            rank, active, done = args
+            return _doubling_round(info, cfg, eng, spec, h, rank, gidx, active)
 
-        rank, done = lax.cond(done, lambda a: a, do, (rank, done))
+        rank, active, done = lax.cond(
+            done, lambda a: a, do, (rank, active, done)
+        )
     return rank
 
 

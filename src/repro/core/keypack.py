@@ -1,0 +1,147 @@
+"""Fused sort keys for the prefix-doubling build hot loop.
+
+Every doubling round sorts ``(rank, rank[i+h])`` pairs with an index
+payload.  The seed implementation passed three separate int32 operands to
+``lax.sort(num_keys=2)``; every merge-exchange / shuffle round therefore
+moved (and compared) three words per element.  This module packs the pair
+into the minimum number of **uint32 key words** — one word whenever
+``bits(rank) + bits(rank2+1) <= 32`` (holds for n <= 65535), two words
+otherwise —
+so the sort engines move one or two key operands plus one payload, and the
+radix engine knows exactly how many significant bits each word carries.
+
+Pad semantics (the unsigned replacement for the seed's signed int32 pad):
+
+* Ranks are biased by +1 before packing so ``suffix_array.OVERFLOW_RANK``
+  (-1, the "suffix shorter than h" marker) packs to field value 0 and keeps
+  sorting *before* every real rank.
+* Pad keys are **field-limited all-ones** (``(1 << field_bits) - 1`` per
+  word), not ``0xFFFFFFFF``: the radix engine only sorts ``key_bits``
+  significant bits, so a pad must stay maximal *within the field*.  For
+  pair keys the all-ones pad is strictly greater than any real key (proof
+  in ``PairSpec.pad_words``); q-gram keys can saturate the field, which is
+  why ``dist_sort.samplesort_sharded`` breaks pad/real ties on a validity
+  key instead of the key value.
+
+Also here: the packed q-gram initialiser.  ``qgram_params`` picks
+``q = floor(32 / ceil(log2 sigma))`` characters per uint32 word (10 for the
+sigma=6 DNA corpora, 3 for byte text); ranking suffixes by that word
+replaces the first ``ceil(log2 q)`` doubling rounds of the seed's
+single-character Occ init.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PairSpec(NamedTuple):
+    """Static packing layout for (rank, rank2) pairs of a length-n text."""
+
+    n: int        # ranks r1 in [0, n-1]; r2 in [-1, n-1] (biased +1 on pack)
+    words: int    # key words (1 = fused single uint32, 2 = hi/lo uint32)
+    r1_bits: int  # significant bits of the r1 field
+    r2_bits: int  # significant bits of the biased r2 field
+
+    @property
+    def key_bits(self) -> tuple[int, ...]:
+        """Significant bits per key word, most-significant word first."""
+        if self.words == 1:
+            return (self.r1_bits + self.r2_bits,)
+        return (self.r1_bits, self.r2_bits)
+
+    def pad_words(self) -> tuple[int, ...]:
+        """Field-limited all-ones pad per word; sorts strictly after every
+        real pair key.  (Strict: a real key would need r1 == 2^r1_bits - 1
+        AND r2+1 == 2^r2_bits - 1, i.e. n-1 and n both all-ones, which no
+        n >= 2 satisfies.)"""
+        return tuple((1 << b) - 1 for b in self.key_bits)
+
+
+def pair_spec(n: int) -> PairSpec:
+    """Choose the packing for ranks of a length-``n`` text (static)."""
+    if n < 2:
+        return PairSpec(n, 1, 1, 1)
+    r1_bits = (n - 1).bit_length()   # r1 <= n - 1
+    r2_bits = n.bit_length()         # r2 + 1 <= n
+    if r1_bits + r2_bits <= 32:
+        return PairSpec(n, 1, r1_bits, r2_bits)
+    return PairSpec(n, 2, r1_bits, r2_bits)
+
+
+def pack_pairs(r1: jax.Array, r2: jax.Array, spec: PairSpec
+               ) -> tuple[jax.Array, ...]:
+    """(r1 int32 >= 0, r2 int32 >= -1) -> uint32 key words, MSW first."""
+    hi = r1.astype(jnp.uint32)
+    lo = (r2 + 1).astype(jnp.uint32)
+    if spec.words == 1:
+        return ((hi << spec.r2_bits) | lo,)
+    return hi, lo
+
+
+def unpack_pairs(words: tuple[jax.Array, ...], spec: PairSpec
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Inverse of :func:`pack_pairs` (pad words unpack to garbage — callers
+    mask by slot validity)."""
+    if spec.words == 1:
+        (w,) = words
+        r1 = (w >> spec.r2_bits).astype(jnp.int32)
+        r2 = (w & jnp.uint32((1 << spec.r2_bits) - 1)).astype(jnp.int32) - 1
+        return r1, r2
+    hi, lo = words
+    return hi.astype(jnp.int32), lo.astype(jnp.int32) - 1
+
+
+# ---------------------------------------------------------------------------
+# packed q-gram init
+# ---------------------------------------------------------------------------
+
+def qgram_params(sigma: int, words: int = 2) -> tuple[int, int, int]:
+    """(q, fields_per_word, bits_per_char) for a ``words``-word init key.
+
+    Each uint32 word packs ``floor(32 / ceil(log2 sigma))`` characters; two
+    words (a 64-bit logical key, the default) double q for one extra sort
+    operand — measured on 64 KiB corpora this leaves <0.01% of suffixes
+    ambiguous for DNA/proteins and ~54% (vs 98% single-word) for byte text.
+    """
+    bits = max(1, (max(2, sigma) - 1).bit_length())
+    fpw = max(1, 32 // bits)
+    return fpw * words, fpw, bits
+
+
+def qgram_pad(fpw: int, bits: int) -> int:
+    """Field-limited per-word pad for q-gram keys.  NOT strictly greater
+    than every real key (a text of all max-chars saturates the field);
+    engines break the tie on validity, and LSD-radix stability keeps
+    appended pads last."""
+    return (1 << (fpw * bits)) - 1
+
+
+def qgram_rounds_skipped(q: int) -> int:
+    """Doubling rounds (h = 1, 2, ..) the q-char init makes unnecessary."""
+    return max(0, math.ceil(math.log2(q))) if q > 1 else 0
+
+
+def qgram_keys_local(s: jax.Array, fpw: int, bits: int, words: int = 1
+                     ) -> tuple[jax.Array, ...]:
+    """uint32[n] key words per suffix (MSW first): the first ``words*fpw``
+    chars packed big-endian, 0 (== sentinel) past the end.  Key order
+    matches suffix order truncated to q chars with shorter-sorts-first
+    semantics: past-end padding reuses the sentinel value, and the unique
+    terminal sentinel makes the digit strings of two distinct
+    end-overlapping suffixes differ.
+    """
+    n = s.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    out = []
+    for w in range(words):
+        v = jnp.zeros(n, jnp.uint32)
+        for j in range(w * fpw, (w + 1) * fpw):
+            c = jnp.where(idx + j < n, jnp.roll(s, -j), 0).astype(jnp.uint32)
+            v = (v << bits) | c
+        out.append(v)
+    return tuple(out)

@@ -35,7 +35,7 @@ from .fm_index import (
     count as fm_count,
     locate as fm_locate,
 )
-from .suffix_array import suffix_array
+from .suffix_array import BuildStats, suffix_array, suffix_array_fast
 
 
 @dataclasses.dataclass
@@ -50,6 +50,7 @@ class SequenceIndex:
     length: int          # padded length
     text_length: int     # true length incl. sentinel
     mesh: Mesh | None = None
+    build_stats: BuildStats | None = None  # fast-build trajectory (1-device)
 
     def count(self, patterns) -> jax.Array:
         """Exact-match counts for int32[B, L] PAD-padded patterns."""
@@ -88,6 +89,7 @@ def build_index(
     max_retries: int = 3,
     sa_sample_rate: int = 32,
     pack: bool | None = None,
+    fast: bool = True,
 ) -> SequenceIndex:
     """Build a (distributed) BWT/FM index over raw tokens (no sentinel).
 
@@ -95,6 +97,11 @@ def build_index(
     ``sa_sample_rate``-th text position into the index, enabling
     ``SequenceIndex.locate`` (set 0 to skip).  ``pack`` as in
     ``build_fm_index`` (None = bit-pack when the alphabet fits).
+
+    ``sa_config`` also carries the build-engine knobs (qgram / discard /
+    local_sort) for both the distributed and the single-device path; the
+    single-device path uses the fused-key fast builder unless ``fast=False``
+    (the seed ``lax.while_loop`` reference — same output bit-for-bit).
 
     With a mesh, retries samplesort capacity overflows with doubled factor —
     the explicit analogue of Spark skew recovery (DESIGN.md §4).
@@ -106,11 +113,20 @@ def build_index(
     if mesh is None:
         s, sigma = prepare_tokens(tokens, sample_rate)
         s_dev = jnp.asarray(s)
-        sa = suffix_array(s_dev, sigma)
+        stats = None
+        if fast:
+            sa, stats = suffix_array_fast(
+                s_dev, sigma, local_sort=sa_config.local_sort,
+                qgram=sa_config.qgram, qgram_words=sa_config.qgram_words,
+                discard=sa_config.discard,
+            )
+        else:
+            sa = suffix_array(s_dev, sigma)
         bwt_arr, row = bwt_from_sa(s_dev, sa)
         fm = build_fm_index(bwt_arr, row, sigma, sample_rate, pack=pack,
                             sa=sa if sa_sample_rate else None, **sa_kw)
-        return SequenceIndex(fm, sa, bwt_arr, row, sigma, len(s), text_length)
+        return SequenceIndex(fm, sa, bwt_arr, row, sigma, len(s), text_length,
+                             build_stats=stats)
 
     parts = mesh.shape[sa_config.axis]
     s, sigma = prepare_tokens(tokens, parts * sample_rate)

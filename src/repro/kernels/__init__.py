@@ -8,6 +8,7 @@ assert exact agreement in interpret mode.
 from .ops import (  # noqa: F401
     char_histogram,
     radix_hist,
+    radix_sort,
     rank_packed,
     rank_select,
     rank_unpacked,

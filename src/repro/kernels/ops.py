@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from . import ref
 from .char_histogram import char_histogram_pallas
 from .radix_hist import radix_hist_pallas
+from .radix_sort import radix_sort_jnp, radix_sort_pallas
 from .rank_select import rank_packed_jnp, rank_packed_pallas, rank_select_pallas
 from .rerank_scan import rerank_scan_pallas
 
@@ -63,6 +64,82 @@ def rerank_scan(r1, r2, *, block: int = 512, interpret: bool | None = None):
         ranks = ranks[:n]
         ngroups = ngroups - 1  # the padding group
     return ranks, ngroups[0]
+
+
+def _sort_impl_default() -> str:
+    """Local-sort backend for the build hot path: the Pallas radix pipeline
+    on TPU, the pure-jnp counting sort elsewhere ("interpret" is opt-in for
+    kernel parity tests)."""
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+COMPARE = "compare"
+RADIX = "radix"
+
+
+def resolve_sort_engine(engine: str) -> str:
+    """"auto" -> the backend default: the radix engine on TPU, lax.sort
+    off-TPU (the jnp counting-sort fallback loses ~3x to XLA's native sort
+    on CPU)."""
+    if engine == "auto":
+        return RADIX if jax.default_backend() == "tpu" else COMPARE
+    if engine not in (COMPARE, RADIX):
+        raise ValueError(f"unknown local_sort engine {engine!r}")
+    return engine
+
+
+def local_sort(operands, num_keys: int, *, engine: str = COMPARE,
+               key_bits=None):
+    """Stable local sort of key operands + payloads by the chosen engine
+    (the single dispatch used by both the single-device builder and the
+    distributed sort engines).  Both engines are stable, so they are
+    interchangeable bit-for-bit."""
+    operands = tuple(operands)
+    if engine == RADIX:
+        if key_bits is None:
+            key_bits = (32,) * num_keys
+        return radix_sort(operands, num_keys=num_keys,
+                          key_bits=tuple(key_bits))
+    return jax.lax.sort(operands, num_keys=num_keys, is_stable=True)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_keys", "key_bits", "block", "impl")
+)
+def radix_sort(operands, *, num_keys: int, key_bits, block: int = 1024,
+               impl: str | None = None):
+    """Stable LSD radix sort of uint32 key words (MSW first) + payloads.
+
+    ``key_bits[w]`` bounds the significant bits of key word ``w`` — pads
+    (and every caller's pad slots, see ``core.keypack``) must be field-
+    limited, because digits above ``key_bits`` are never examined.
+    ``impl``: None -> backend default ("pallas" on TPU, "jnp" elsewhere);
+    "interpret" runs the kernels in interpret mode for parity testing.
+    """
+    impl = _sort_impl_default() if impl is None else impl
+    operands = tuple(operands)
+    key_bits = tuple(key_bits)
+    if impl == "jnp":
+        return radix_sort_jnp(operands, num_keys, key_bits)
+    n = operands[0].shape[0]
+    pad = (-n) % block
+    if pad:
+        # pads go AFTER real data; per-pass stability keeps them there even
+        # when a real key saturates its field (ties resolve to input order)
+        operands = tuple(
+            jnp.concatenate([
+                a,
+                jnp.full((pad,),
+                         (1 << key_bits[i]) - 1 if i < num_keys else 0,
+                         a.dtype),
+            ])
+            for i, a in enumerate(operands)
+        )
+    out = radix_sort_pallas(operands, num_keys, key_bits, block=block,
+                            interpret=(impl == "interpret"))
+    if pad:
+        out = tuple(a[:n] for a in out)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("shift", "block", "interpret"))

@@ -1,0 +1,141 @@
+"""LSD radix sort over packed uint32 key words — the local-sort engine of
+the distributed BWT build (DESIGN.md §4).
+
+Completes the orphaned ``radix_hist`` counting kernel into the full
+hist -> exclusive-scan -> scatter pipeline, one 8-bit digit per pass:
+
+  1. ``radix_hist_pallas``      per-block 256-bin digit histograms (VMEM)
+  2. digit-major exclusive scan (tiny: nblocks x 256, plain jnp)
+  3. ``radix_pos_pallas``       per-element destination = global bin base +
+                                stable intra-block rank (onehot cumsum in
+                                VMEM, no gathers — onehot-select only)
+  4. apply                      one XLA scatter per operand
+
+The scatter itself stays in XLA on purpose: Mosaic's block model cannot
+express an arbitrary HBM scatter (an output block must be addressed by the
+grid index map), while steps 1-3 — the compute-heavy part — stay in VMEM.
+
+Keys are **field-limited**: only ``key_bits[w]`` low bits of word ``w`` are
+significant (see ``core.keypack``), so a k-bit key costs ``ceil(k/8)``
+passes instead of 4, and multi-word (64-bit logical) keys sort
+least-significant word first.  Every pass is stable, hence so is the whole
+sort — pad slots appended after real data stay behind equal real keys.
+
+``radix_sort_jnp`` is the collective-free pure-jnp fallback used off-TPU
+(same counting sort; the per-pass transient is an (n, 2^radix_bits) int32
+cumsum, so auto mode narrows the digit with n to hold it near 64 MiB —
+floored at 1-bit digits, where transients grow past the target for
+n > 2^23); dispatch lives in ``kernels.ops.radix_sort``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+from .radix_hist import radix_hist_pallas
+
+
+def _pos_kernel(keys_ref, base_ref, out_ref, *, shift: int, block: int):
+    keys = keys_ref[...].reshape(-1).astype(jnp.uint32)
+    digits = (keys >> shift) & 0xFF                       # (block,)
+    bins = lax.broadcasted_iota(jnp.uint32, (block, 256), 1)
+    onehot = digits[:, None] == bins                      # (block, 256)
+    incl = jnp.cumsum(onehot.astype(jnp.int32), axis=0)   # stable intra rank
+    base = base_ref[...].reshape(-1).astype(jnp.int32)    # (256,) bin bases
+    pos = jnp.sum(jnp.where(onehot, base[None, :] + incl - 1, 0), axis=1)
+    out_ref[...] = pos.astype(jnp.int32).reshape(out_ref.shape)
+
+
+def radix_pos_pallas(keys, base, shift: int, *, block: int = 1024,
+                     interpret: bool = False):
+    """Destination position of every element for one 8-bit digit pass.
+
+    keys uint32[n] (n % block == 0), base int32[n//block, 256] = global
+    start of (block, digit) runs in digit-major order.
+    """
+    n = keys.shape[0]
+    if n % block:
+        raise ValueError(f"n={n} must be a multiple of block={block}")
+    nblocks = n // block
+    lanes = 128
+    rows = block // lanes
+    if block % lanes:
+        raise ValueError(f"block={block} must be a multiple of {lanes}")
+    x2d = keys.reshape(nblocks * rows, lanes)
+    out = pl.pallas_call(
+        functools.partial(_pos_kernel, shift=shift, block=block),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((1, 256), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rows, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks * rows, lanes), jnp.int32),
+        interpret=interpret,
+    )(x2d, base)
+    return out.reshape(n)
+
+
+def _digit_major_bases(hist):
+    """(nblocks, 256) per-block histograms -> (nblocks, 256) global bin
+    bases: exclusive scan in (digit, block) order."""
+    nblocks, nbins = hist.shape
+    flat = hist.T.reshape(-1)                   # digit-major
+    starts = jnp.cumsum(flat) - flat
+    return starts.reshape(nbins, nblocks).T.astype(jnp.int32)
+
+
+def radix_sort_pallas(operands, num_keys: int, key_bits, *,
+                      block: int = 1024, interpret: bool = False):
+    """Stable LSD radix sort of uint32 key words + payload operands.
+
+    ``operands[:num_keys]`` are uint32 key words, most-significant first
+    (the ``lax.sort`` convention); ``key_bits[w]`` bounds the significant
+    bits of word w.  n must be a multiple of ``block`` (ops pads).
+    """
+    arrs = list(operands)
+    for w in range(num_keys - 1, -1, -1):
+        for shift in range(0, key_bits[w], 8):
+            word = arrs[w]
+            hist = radix_hist_pallas(word, shift, block=block,
+                                     interpret=interpret)
+            base = _digit_major_bases(hist)
+            pos = radix_pos_pallas(word, base, shift, block=block,
+                                   interpret=interpret)
+            arrs = [jnp.zeros_like(a).at[pos].set(a) for a in arrs]
+    return tuple(arrs)
+
+
+def radix_sort_jnp(operands, num_keys: int, key_bits, *,
+                   radix_bits: int | None = None):
+    """Pure-jnp stable LSD counting sort (the off-TPU fallback).
+
+    The per-pass transient is an (n, 2^radix_bits) int32 cumsum; auto mode
+    narrows the digit as n grows to keep it near 64 MiB (floor: 1-bit
+    digits, so the bound is exceeded for n > 2^23 — more, cheaper passes
+    beat an OOM).
+    """
+    n = operands[0].shape[0]
+    if radix_bits is None:
+        # n * 2^bits * 4 B <= ~2^26  =>  bits <= 24 - log2(n)
+        radix_bits = max(1, min(8, 24 - max(1, n - 1).bit_length()))
+    arrs = list(operands)
+    for w in range(num_keys - 1, -1, -1):
+        for shift in range(0, key_bits[w], radix_bits):
+            nb = min(radix_bits, key_bits[w] - shift)
+            nbins = 1 << nb
+            word = arrs[w].astype(jnp.uint32)
+            d = ((word >> shift) & (nbins - 1)).astype(jnp.int32)
+            onehot = d[:, None] == jnp.arange(nbins, dtype=jnp.int32)[None, :]
+            incl = jnp.cumsum(onehot.astype(jnp.int32), axis=0)
+            totals = incl[-1]
+            starts = jnp.cumsum(totals) - totals
+            intra = jnp.take_along_axis(incl, d[:, None], axis=1)[:, 0] - 1
+            pos = starts[d] + intra
+            arrs = [jnp.zeros_like(a).at[pos].set(a) for a in arrs]
+    return tuple(arrs)

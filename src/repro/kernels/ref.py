@@ -36,6 +36,11 @@ def radix_hist_ref(keys: jax.Array, shift: int, block: int) -> jax.Array:
     return onehot.sum(axis=1).astype(jnp.int32)
 
 
+def radix_sort_ref(operands, num_keys: int):
+    """Stable-sort oracle for the radix pipeline (XLA's stable sort)."""
+    return lax.sort(tuple(operands), num_keys=num_keys, is_stable=True)
+
+
 def rank_select_ref(
     bwt_blocks: jax.Array, block_idx: jax.Array, c: jax.Array, cutoff: jax.Array
 ) -> jax.Array:

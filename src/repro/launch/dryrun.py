@@ -204,7 +204,9 @@ def lower_index_cell(shape_kind: str, *, multi_pod: bool):
     if shape_kind == "build":
         cfg = DistSAConfig(axis="parts", engine=icfg.engine,
                            capacity_factor=icfg.capacity_factor,
-                           rounds=icfg.rounds)
+                           rounds=icfg.rounds, qgram=icfg.qgram,
+                           qgram_words=icfg.qgram_words,
+                           discard=icfg.discard, local_sort=icfg.local_sort)
         s = jax.ShapeDtypeStruct(
             (n,), jnp.int32,
             sharding=jax.sharding.NamedSharding(

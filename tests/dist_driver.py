@@ -37,6 +37,7 @@ from repro.core.dist_suffix_array import (  # noqa: E402
     DistSAConfig,
     build_bwt_sharded,
     build_isa_sharded,
+    isa_overflowed,
 )
 from repro.core.suffix_array import suffix_array_naive  # noqa: E402
 from repro.core.bwt import bwt_naive  # noqa: E402
@@ -206,6 +207,64 @@ def scenario_sa_bitonic():
     print("distributed SA/BWT (bitonic) ok")
 
 
+def scenario_sa_fused():
+    """Fused-key / q-gram / discard / radix knobs vs the naive oracle: each
+    case must produce the identical SA + BWT.  The exhaustive knob matrix
+    runs single-device in tests/test_build_fast.py; this covers the
+    distributed-specific paths (both engines, active-aware shuffle, skew
+    overflow retry, radix local sort inside shard_map)."""
+    mesh = make_mesh()
+    rng = np.random.default_rng(13)
+    n = DEVICES * 24
+    # (sigma_hi, engine, qgram, qgram_words, discard, local_sort)
+    cases = [
+        (2, BITONIC, True, 2, True, "compare"),
+        (2, SAMPLESORT, True, 2, True, "compare"),   # max skew: all keys ==
+        (4, BITONIC, True, 2, True, "radix"),
+        (4, SAMPLESORT, True, 2, True, "radix"),
+        (4, SAMPLESORT, True, 1, False, "compare"),
+        (20, BITONIC, False, 1, True, "compare"),
+        (20, SAMPLESORT, True, 2, True, "compare"),
+        (64, BITONIC, True, 1, False, "radix"),
+        (64, SAMPLESORT, False, 1, True, "compare"),
+        (64, SAMPLESORT, True, 2, False, "compare"),
+    ]
+    corpora = {}
+    for sigma_hi, engine, qgram, qw, discard, ls in cases:
+        if sigma_hi not in corpora:
+            toks = rng.integers(1, max(2, sigma_hi), n - 1).astype(np.int32)
+            if sigma_hi == 2:
+                toks[:] = 1  # unary: maximally repetitive AND skewed
+            s = al.append_sentinel(toks)
+            corpora[sigma_hi] = (
+                s, suffix_array_naive(s), *bwt_naive(s)
+            )
+        s, want_sa, want_bwt, want_row = corpora[sigma_hi]
+        sigma = al.sigma_of(s)
+        cfg = DistSAConfig(
+            axis=AXIS, engine=engine, capacity_factor=4.0, qgram=qgram,
+            qgram_words=qw, discard=discard, local_sort=ls,
+        )
+        key = (sigma, engine, qgram, qw, discard, ls)
+        # unary text: every key equal, range partitioning can't split ->
+        # samplesort overflows by design; retry with doubled factor
+        # exactly like pipeline.build_index
+        for _ in range(4):
+            isa = build_isa_sharded(jnp.asarray(s), mesh, cfg, sigma=sigma)
+            if not isa_overflowed(isa):
+                break
+            cfg = cfg._replace(capacity_factor=cfg.capacity_factor * 2)
+        else:
+            raise AssertionError(f"overflow persists {key}")
+        sa, bwt_arr, row = build_bwt_sharded(
+            jnp.asarray(s), mesh, cfg, sigma=sigma
+        )
+        assert np.array_equal(np.asarray(sa), want_sa), key
+        assert np.array_equal(np.asarray(bwt_arr), want_bwt), key
+        assert int(row) == want_row, key
+    print("fused/qgram/discard parity ok")
+
+
 def scenario_sa_samplesort():
     for seed, mult in [(0, 8), (1, 17), (2, 64)]:
         _check_sa(SAMPLESORT, seed, mult)
@@ -350,6 +409,7 @@ SCENARIOS = {
     "samplesort": scenario_samplesort,
     "scatter": scenario_scatter,
     "sa_bitonic": scenario_sa_bitonic,
+    "sa_fused": scenario_sa_fused,
     "sa_samplesort": scenario_sa_samplesort,
     "dist_fm": scenario_dist_fm,
     "dist_locate": scenario_dist_locate,

@@ -17,6 +17,7 @@ SCENARIOS = [
     "samplesort",
     "scatter",
     "sa_bitonic",
+    "sa_fused",
     "sa_samplesort",
     "dist_fm",
     "dist_locate",
