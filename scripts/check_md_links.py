@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Fail on broken *relative* links in the repo's markdown files.
+
+Checks every ``[text](target)`` whose target is not an absolute URL or
+in-page anchor: the referenced file/directory must exist relative to the
+markdown file.  Used by the CI docs job so README/docs pointers can't rot.
+
+    python scripts/check_md_links.py [root]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) — target captured up to the first unescaped ')'
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check(root: str) -> list[str]:
+    errors = []
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [
+            d for d in dirnames
+            if d not in (".git", "__pycache__", ".pytest_cache", "node_modules")
+        ]
+        for fn in filenames:
+            if not fn.endswith(".md"):
+                continue
+            path = os.path.join(dirpath, fn)
+            with open(path, encoding="utf-8") as f:
+                text = f.read()
+            # fenced code blocks are not links
+            text = re.sub(r"```.*?```", "", text, flags=re.S)
+            for m in LINK_RE.finditer(text):
+                target = m.group(1)
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                target = target.split("#", 1)[0]  # drop section anchors
+                if not target:
+                    continue
+                resolved = os.path.normpath(os.path.join(dirpath, target))
+                if not os.path.exists(resolved):
+                    rel = os.path.relpath(path, root)
+                    errors.append(f"{rel}: broken link -> {m.group(1)}")
+    return errors
+
+
+def main() -> int:
+    root = sys.argv[1] if len(sys.argv) > 1 else "."
+    errors = check(root)
+    for e in errors:
+        print(e, file=sys.stderr)
+    n_md = sum(
+        fn.endswith(".md")
+        for _, _, fns in os.walk(root) for fn in fns
+    )
+    print(f"checked {n_md} markdown files: {len(errors)} broken links")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,9 +32,19 @@ class BWTIndexConfig:
     # serve_* knobs feed serving.engine.FMQueryServer.from_config
     pack: bool | None = None      # None: bit-pack whenever sigma <= 16
     sa_sample_rate: int = 32      # SA sampling stride for locate() (0 = off)
+    compress_sa: bool | None = None  # None: bit-pack SA values when smaller
     locate_k: int = 16            # occurrences returned per locate query
     serve_length_buckets: tuple[int, ...] = (8, 16, 32, 64)
     serve_max_batch: int = 1024   # micro-batch cap per jit bucket
+
+    # index lifecycle: ckpt_dir/ckpt_keep default launch.serve's --ckpt-dir/
+    # --ckpt-keep flags (core/index_io.py checkpoints restore onto any mesh
+    # shape); compress_sa + segment_min_tokens feed pipeline.build_index and
+    # SegmentedIndex.from_config (segments smaller than the threshold merge
+    # on compact())
+    ckpt_dir: str | None = None   # None = index dies with the process
+    ckpt_keep: int = 3            # retained checkpoint steps
+    segment_min_tokens: int = 1 << 22  # compact() threshold for small segments
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)

@@ -52,19 +52,20 @@ class DistFMIndex:
     fused: jax.Array | None        # int32[nblocks, sigma+W] sharded (packed)
     sa_marks: jax.Array | None     # int32[ceil(n/32)]  replicated
     sa_mark_ranks: jax.Array | None
-    sa_vals: jax.Array | None
+    sa_vals: jax.Array | None      # raw int32, or packed when sa_val_bits > 0
     sample_rate: int
     sigma: int
     length: int
     parts: int
     bits: int               # packed field width (0 = unpacked layout)
     sa_sample_rate: int     # 0 = locate unavailable
+    sa_val_bits: int = 0    # bits per packed SA value (0 = raw int32)
 
     def tree_flatten(self):
         return ((self.bwt, self.occ_samples, self.c_array, self.row,
                  self.fused, self.sa_marks, self.sa_mark_ranks, self.sa_vals),
                 (self.sample_rate, self.sigma, self.length, self.parts,
-                 self.bits, self.sa_sample_rate))
+                 self.bits, self.sa_sample_rate, self.sa_val_bits))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -106,7 +107,16 @@ def _build_jit(bwt, sigma, sample_rate, bits, mesh):
 def build_dist_fm_index(
     bwt, row, mesh: Mesh, *, sigma: int, sample_rate: int = 64,
     sa=None, sa_sample_rate: int = 32, pack: bool | None = None,
+    compress_sa: bool | None = None, sa_samples: tuple | None = None,
 ) -> DistFMIndex:
+    """Shard a BWT over the mesh ``parts`` axis and build per-shard Occ
+    checkpoints (+ fused packed rows when the alphabet fits).
+
+    ``bwt`` int32[n] with n divisible by parts * sample_rate; ``sa`` /
+    ``sa_sample_rate`` / ``compress_sa`` enable a replicated SA sample for
+    ``dist_locate`` (as in ``fm_index.build_fm_index``); ``sa_samples``
+    injects prebuilt (marks, ranks, vals, val_bits) on checkpoint restore.
+    """
     n = bwt.shape[0]
     parts = mesh.shape[AXIS]
     if (n % parts) or ((n // parts) % sample_rate):
@@ -121,15 +131,19 @@ def build_dist_fm_index(
     bwt = jax.device_put(bwt, NamedSharding(mesh, P(AXIS)))
     occ_samples, fused, c_array = _build_jit(bwt, sigma, sample_rate, bits,
                                              mesh)
-    if sa is not None:
-        sa_marks, sa_mark_ranks, sa_vals = build_sa_samples(sa, sa_sample_rate)
+    if sa_samples is not None:
+        sa_marks, sa_mark_ranks, sa_vals, sa_val_bits = sa_samples
+    elif sa is not None:
+        sa_marks, sa_mark_ranks, sa_vals, sa_val_bits = build_sa_samples(
+            sa, sa_sample_rate, compress=compress_sa
+        )
     else:
         sa_marks = sa_mark_ranks = sa_vals = None
-        sa_sample_rate = 0
+        sa_sample_rate = sa_val_bits = 0
     return DistFMIndex(
         bwt, occ_samples, c_array, jnp.asarray(row, jnp.int32),
         fused if bits else None, sa_marks, sa_mark_ranks, sa_vals,
-        sample_rate, sigma, n, parts, bits, sa_sample_rate,
+        sample_rate, sigma, n, parts, bits, sa_sample_rate, sa_val_bits,
     )
 
 
@@ -219,7 +233,7 @@ def dist_count(index: DistFMIndex, patterns, mesh: Mesh) -> jax.Array:
 
 def _locate_local(bwt_local, occ_local, fused_local, c_array,
                   marks, mark_ranks, vals, patterns,
-                  *, m, r, n, bits, sigma, s, k):
+                  *, m, r, n, bits, sigma, s, k, val_bits):
     """shard_map body: backward search + LF-walk to the replicated SA sample.
 
     Every walk step costs one psum'd rank batch plus one psum'd BWT-symbol
@@ -242,7 +256,8 @@ def _locate_local(bwt_local, occ_local, fused_local, c_array,
 
     def body(_, st):
         rows, pos, steps, done = st
-        marked, val = sample_lookup(marks, mark_ranks, vals, rows)
+        marked, val = sample_lookup(marks, mark_ranks, vals, rows,
+                                    val_bits=val_bits, val_scale=s)
         pos = jnp.where(marked & ~done, val + steps, pos)
         done = done | marked
         c = bwt_at(rows)
@@ -261,12 +276,12 @@ def _locate_local(bwt_local, occ_local, fused_local, c_array,
 
 @functools.partial(jax.jit, static_argnames=("index_static", "k", "mesh"))
 def _locate_jit(index_arrays, patterns, index_static, k, mesh):
-    sample_rate, sigma, n, parts, bits, s = index_static
+    sample_rate, sigma, n, parts, bits, s, val_bits = index_static
     bwt, occ_samples, c_array, fused, marks, mark_ranks, vals = index_arrays
     m = n // parts
     fn = functools.partial(
         _locate_local, m=m, r=sample_rate, n=n, bits=bits, sigma=sigma,
-        s=s, k=k,
+        s=s, k=k, val_bits=val_bits,
     )
     return shard_map(
         fn, mesh=mesh,
@@ -288,5 +303,5 @@ def dist_locate(index: DistFMIndex, patterns, k: int, mesh: Mesh):
               _fused_operand(index),
               index.sa_marks, index.sa_mark_ranks, index.sa_vals)
     static = (index.sample_rate, index.sigma, index.length, index.parts,
-              index.bits, index.sa_sample_rate)
+              index.bits, index.sa_sample_rate, index.sa_val_bits)
     return _locate_jit(arrays, jnp.asarray(patterns), static, k, mesh)

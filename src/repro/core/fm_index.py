@@ -17,7 +17,12 @@ Layout (all dense arrays, shard- and jit-friendly):
   value is a multiple of ``sa_sample_rate`` are marked in a bitvector (with
   per-word popcount checkpoints) and their values stored in row order; any
   occurrence is recovered by LF-walking <= sa_sample_rate - 1 steps to a
-  marked row.
+  marked row.  The stored values are optionally *compressed*: every marked
+  value is a multiple of the stride s, so ``val // s`` fits in
+  ``ceil(log2(n / s))`` bits and is bit-packed into a contiguous int32
+  bitstream (``sa_val_bits`` > 0 selects the packed decode).  At small
+  strides this shrinks the dominant locate structure ~2-3x (e.g. 32 -> 12
+  bits per value for n = 2^16, s = 4).
 
 rank(c, p) = occ_samples[p // r, c] + count of c in bwt[(p//r)*r : p].
 ``sample_rate`` trades memory for per-query scan length r — the classic
@@ -53,11 +58,13 @@ class FMIndex:
     sa_marks: jax.Array | None       # int32[ceil(n/32)] bitvector
     sa_mark_ranks: jax.Array | None  # int32[ceil(n/32)] excl. popcount cumsum
     sa_vals: jax.Array | None        # int32[#marked] SA values, row order
+                                     # (or packed words when sa_val_bits > 0)
     sample_rate: int          # static (pytree aux data)
     sigma: int                # static (pytree aux data)
     length: int               # static: true text length n
     bits: int                 # static: packed field width (0 = unpacked)
     sa_sample_rate: int       # static: SA sampling stride (0 = no locate)
+    sa_val_bits: int = 0      # static: bits per packed SA value (0 = raw)
 
     @property
     def n(self) -> int:
@@ -72,7 +79,7 @@ class FMIndex:
             (self.bwt, self.row, self.c_array, self.occ_samples, self.fused,
              self.sa_marks, self.sa_mark_ranks, self.sa_vals),
             (self.sample_rate, self.sigma, self.length, self.bits,
-             self.sa_sample_rate),
+             self.sa_sample_rate, self.sa_val_bits),
         )
 
     @classmethod
@@ -80,12 +87,61 @@ class FMIndex:
         return cls(*children, *aux)
 
 
-def build_sa_samples(sa, sa_sample_rate: int):
-    """(marks, mark_ranks, vals) for locate(): host-side, exact.
+def pack_sa_values(q: np.ndarray, bits: int) -> np.ndarray:
+    """Bit-pack int values ``q`` (each < 2^bits, bits < 32) LSB-first into a
+    contiguous int32 bitstream; value i occupies bits [i*bits, (i+1)*bits).
+
+    One trailing guard word is appended so the two-word decode in
+    ``unpack_sa_value`` never reads out of bounds.  Host-side numpy.
+    """
+    q = np.asarray(q, np.uint64)
+    n = q.size
+    bitpos = np.arange(n, dtype=np.int64) * bits
+    w = bitpos >> 5
+    off = (bitpos & 31).astype(np.uint64)
+    nwords = int(-(-(n * bits) // 32)) + 1  # ceil + guard word
+    words = np.zeros(nwords, np.uint64)
+    lo = q << off                       # spans <= 2 consecutive 32-bit words
+    np.bitwise_or.at(words, w, lo & np.uint64(0xFFFFFFFF))
+    np.bitwise_or.at(words, w + 1, lo >> np.uint64(32))
+    return words.astype(np.uint32).view(np.int32)
+
+
+def unpack_sa_value(words: jax.Array, idx: jax.Array, bits: int) -> jax.Array:
+    """Decode packed value ``idx`` from a ``pack_sa_values`` bitstream.
+
+    ``words`` int32[nwords], ``idx`` int32[B] (any shape), ``bits`` static.
+    Two gathers + shifts per value; out-of-range idx (garbage lanes of the
+    locate walk) clamp in bounds and decode garbage, exactly like the raw
+    ``vals[clip(idx)]`` path.
+    """
+    W = lax.bitcast_convert_type(words, jnp.uint32)
+    # idx * bits can overflow int32 at corpus scale; split the product
+    base = (idx // 32) * bits
+    rem = (idx % 32) * bits
+    w = jnp.clip(base + rem // 32, 0, words.shape[0] - 2)
+    off = (rem % 32).astype(jnp.uint32)
+    lo = W[w] >> off
+    hi = jnp.where(
+        off > 0,
+        W[w + 1] << ((jnp.uint32(32) - off) & jnp.uint32(31)),
+        jnp.uint32(0),
+    )
+    mask = jnp.uint32((1 << bits) - 1)
+    return ((lo | hi) & mask).astype(jnp.int32)
+
+
+def build_sa_samples(sa, sa_sample_rate: int, *, compress: bool | None = None):
+    """(marks, mark_ranks, vals, val_bits) for locate(): host-side, exact.
 
     Rows i with SA[i] % s == 0 are marked; their SA values are stored in row
     order.  Value lookup for marked row i is vals[mark_ranks[i//32] +
     popcount(marks[i//32] & low_bits(i%32))] — O(1), fully vectorisable.
+
+    ``compress`` bit-packs the stored values: every sampled value is a
+    multiple of s, so ``val // s`` fits ``ceil(log2(n/s))`` bits.  None
+    (default) packs whenever that width beats raw int32; the returned
+    ``val_bits`` (0 = raw) selects the decode in ``sample_lookup``.
     """
     sa_np = np.asarray(sa)
     n = sa_np.shape[0]
@@ -99,22 +155,39 @@ def build_sa_samples(sa, sa_sample_rate: int):
     pc = np.unpackbits(words.view(np.uint8)).reshape(nwords, 32).sum(axis=1)
     ranks = (np.cumsum(pc) - pc).astype(np.int32)
     vals = sa_np[marked].astype(np.int32)  # SA holds 0, so never empty
+    q = vals // sa_sample_rate             # exact: marked vals are multiples
+    val_bits = max(1, int(q.max()).bit_length()) if q.size else 0
+    if compress is None:
+        compress = 0 < val_bits < 32
+    if compress and not 0 < val_bits < 32:
+        raise ValueError(f"cannot compress SA sample (val_bits={val_bits})")
+    if not compress:
+        val_bits = 0
     return (
         jnp.asarray(words.view(np.int32)),
         jnp.asarray(ranks),
-        jnp.asarray(vals),
+        jnp.asarray(pack_sa_values(q, val_bits) if compress else vals),
+        val_bits,
     )
 
 
 def build_fm_index(
     bwt_arr: jax.Array, row: jax.Array, sigma: int, sample_rate: int = 64,
     *, sa: jax.Array | None = None, sa_sample_rate: int = 32,
-    pack: bool | None = None,
+    pack: bool | None = None, compress_sa: bool | None = None,
+    sa_samples: tuple | None = None,
 ) -> FMIndex:
-    """Build the query index.  ``pack=None`` bit-packs whenever the alphabet
-    fits (sigma <= 16 and r divisible by the fields-per-word); ``pack=False``
-    forces the unpacked layout (benchmark baseline).  Passing the suffix
-    array ``sa`` enables ``locate`` via SA sampling.
+    """Build the query index from a BWT.
+
+    ``bwt_arr`` int32[n] (tokens in [0, sigma)), ``row`` scalar int32 (the
+    BWT row of the original string), ``sample_rate`` the Occ checkpoint
+    spacing r.  ``pack=None`` bit-packs whenever the alphabet fits (sigma <=
+    16 and r divisible by the fields-per-word); ``pack=False`` forces the
+    unpacked layout (benchmark baseline).  Passing the suffix array ``sa``
+    enables ``locate`` via SA sampling; ``compress_sa`` as in
+    ``build_sa_samples``.  ``sa_samples`` = (marks, mark_ranks, vals,
+    val_bits) injects prebuilt sample arrays instead (checkpoint restore,
+    where the full SA no longer exists).
     """
     n = bwt_arr.shape[0]
     counts = jnp.bincount(bwt_arr, length=sigma)
@@ -139,16 +212,20 @@ def build_fm_index(
         words = pack_words(padded, bits).reshape(n_blocks, -1)
         fused = jnp.concatenate([occ_samples[:-1], words], axis=1)
 
-    if sa is not None:
-        sa_marks, sa_mark_ranks, sa_vals = build_sa_samples(sa, sa_sample_rate)
+    if sa_samples is not None:
+        sa_marks, sa_mark_ranks, sa_vals, sa_val_bits = sa_samples
+    elif sa is not None:
+        sa_marks, sa_mark_ranks, sa_vals, sa_val_bits = build_sa_samples(
+            sa, sa_sample_rate, compress=compress_sa
+        )
     else:
         sa_marks = sa_mark_ranks = sa_vals = None
-        sa_sample_rate = 0
+        sa_sample_rate = sa_val_bits = 0
 
     # the padded copy keeps every in-block dynamic_slice in bounds
     return FMIndex(padded, jnp.asarray(row, jnp.int32), c_array, occ_samples,
                    fused, sa_marks, sa_mark_ranks, sa_vals,
-                   sample_rate, sigma, n, bits, sa_sample_rate)
+                   sample_rate, sigma, n, bits, sa_sample_rate, sa_val_bits)
 
 
 def occ_batch(index: FMIndex, c: jax.Array, p: jax.Array) -> jax.Array:
@@ -171,7 +248,8 @@ def occ_batch(index: FMIndex, c: jax.Array, p: jax.Array) -> jax.Array:
 
 
 def occ(index: FMIndex, c: jax.Array, p: jax.Array) -> jax.Array:
-    """Scalar Occ(c, p) — convenience wrapper over the batched path."""
+    """Scalar Occ(c, p): int32 scalars in, int32 scalar out — convenience
+    wrapper over the batched path (same kernel dispatch)."""
     return occ_batch(index, c[None] if c.ndim == 0 else c,
                      p[None] if p.ndim == 0 else p)[0]
 
@@ -215,14 +293,23 @@ def backward_search(index: FMIndex, pattern: jax.Array) -> tuple[jax.Array, jax.
 
 @jax.jit
 def count(index: FMIndex, patterns: jax.Array) -> jax.Array:
-    """Batched exact-match counts: patterns int32[B, m] PAD-padded."""
+    """Batched exact-match counts: patterns int32[B, m] PAD-padded (PAD =
+    -1 on the right) -> counts int32[B].  One rank-kernel dispatch per
+    pattern position and interval end (see ``occ_batch``), jit-cached per
+    (B, m) shape."""
     sp, ep = backward_search_batch(index, patterns)
     return jnp.maximum(ep - sp, 0)
 
 
-def sample_lookup(marks, mark_ranks, vals, rows):
+def sample_lookup(marks, mark_ranks, vals, rows, *, val_bits: int = 0,
+                  val_scale: int = 1):
     """(marked, value) of the SA sample at each row (value garbage when
-    unmarked).  Raw-array form shared with the distributed index."""
+    unmarked).  Raw-array form shared with the distributed index.
+
+    ``rows`` int32[B]; ``val_bits`` > 0 decodes the bit-packed value stream
+    (value = packed quotient * ``val_scale``, the sampling stride); 0 reads
+    raw int32 values.
+    """
     w = rows // 32
     b = (rows % 32).astype(jnp.uint32)
     word = lax.bitcast_convert_type(marks[w], jnp.uint32)
@@ -231,18 +318,23 @@ def sample_lookup(marks, mark_ranks, vals, rows):
         word & ((jnp.uint32(1) << b) - jnp.uint32(1))
     )
     idx = mark_ranks[w] + below.astype(jnp.int32)
-    val = vals[jnp.clip(idx, 0, vals.shape[0] - 1)]
+    if val_bits:
+        val = unpack_sa_value(vals, idx, val_bits) * val_scale
+    else:
+        val = vals[jnp.clip(idx, 0, vals.shape[0] - 1)]
     return marked, val
 
 
 def _sample_lookup(index: FMIndex, rows: jax.Array):
     return sample_lookup(index.sa_marks, index.sa_mark_ranks, index.sa_vals,
-                         rows)
+                         rows, val_bits=index.sa_val_bits,
+                         val_scale=index.sa_sample_rate)
 
 
 def bwt_symbol(index: FMIndex, rows: jax.Array) -> jax.Array:
-    """bwt[rows] batched — extracted from packed words when bit-packed, so
-    the locate walk touches only the compact layout."""
+    """bwt[rows] batched: rows int32[B] -> symbols int32[B] — extracted
+    from packed words when bit-packed, so the locate walk touches only the
+    compact layout."""
     if not index.bits:
         return index.bwt[rows]
     r, bits = index.sample_rate, index.bits

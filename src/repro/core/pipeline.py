@@ -69,10 +69,22 @@ class SequenceIndex:
         return dist_locate(self.fm, patterns, k, self.mesh)
 
 
-def prepare_tokens(tokens: np.ndarray, multiple: int) -> tuple[np.ndarray, int]:
-    """Sentinel-terminate and pad to a multiple; returns (padded, sigma)."""
+def prepare_tokens(
+    tokens: np.ndarray, multiple: int, sigma: int | None = None
+) -> tuple[np.ndarray, int]:
+    """Sentinel-terminate and pad to a multiple; returns (padded, sigma).
+
+    ``sigma`` forces a minimum alphabet size (tokens in [1, sigma)): indexes
+    built over different texts then share one alphabet, so the pad token
+    (placed at the shared sigma) sorts above every real token of *any* of
+    them — required by the segmented index, where a query may carry tokens
+    absent from this particular segment.
+    """
     s = al.append_sentinel(np.asarray(tokens, dtype=np.int32))
-    sigma = al.sigma_of(s)
+    data_sigma = al.sigma_of(s)
+    if sigma is not None and sigma < data_sigma:
+        raise ValueError(f"tokens exceed declared alphabet {sigma}")
+    sigma = max(data_sigma, sigma or 0)
     pad = (-len(s)) % multiple
     if pad:
         s = np.concatenate([s, np.full(pad, sigma, np.int32)])
@@ -90,13 +102,18 @@ def build_index(
     sa_sample_rate: int = 32,
     pack: bool | None = None,
     fast: bool = True,
+    sigma: int | None = None,
+    compress_sa: bool | None = None,
 ) -> SequenceIndex:
     """Build a (distributed) BWT/FM index over raw tokens (no sentinel).
 
     The suffix array produced as a build byproduct is sampled every
     ``sa_sample_rate``-th text position into the index, enabling
     ``SequenceIndex.locate`` (set 0 to skip).  ``pack`` as in
-    ``build_fm_index`` (None = bit-pack when the alphabet fits).
+    ``build_fm_index`` (None = bit-pack when the alphabet fits);
+    ``compress_sa`` as in ``build_sa_samples`` (None = bit-pack the SA
+    sample whenever it shrinks it); ``sigma`` declares a minimum alphabet
+    (see ``prepare_tokens`` — the segmented index passes its global one).
 
     ``sa_config`` also carries the build-engine knobs (qgram / discard /
     local_sort) for both the distributed and the single-device path; the
@@ -111,7 +128,7 @@ def build_index(
     sa_kw = dict(sa_sample_rate=sa_sample_rate) if sa_sample_rate else {}
 
     if mesh is None:
-        s, sigma = prepare_tokens(tokens, sample_rate)
+        s, sigma = prepare_tokens(tokens, sample_rate, sigma)
         s_dev = jnp.asarray(s)
         stats = None
         if fast:
@@ -124,12 +141,13 @@ def build_index(
             sa = suffix_array(s_dev, sigma)
         bwt_arr, row = bwt_from_sa(s_dev, sa)
         fm = build_fm_index(bwt_arr, row, sigma, sample_rate, pack=pack,
+                            compress_sa=compress_sa,
                             sa=sa if sa_sample_rate else None, **sa_kw)
         return SequenceIndex(fm, sa, bwt_arr, row, sigma, len(s), text_length,
                              build_stats=stats)
 
     parts = mesh.shape[sa_config.axis]
-    s, sigma = prepare_tokens(tokens, parts * sample_rate)
+    s, sigma = prepare_tokens(tokens, parts * sample_rate, sigma)
     s_dev = jnp.asarray(s)
     cfg = sa_config
     for attempt in range(max_retries):
@@ -149,6 +167,7 @@ def build_index(
     sa, bwt_arr, row = _bwt_jit(s_sharded, isa, cfg, parts, mesh)
     fm = build_dist_fm_index(bwt_arr, row, mesh, sigma=sigma,
                              sample_rate=sample_rate, pack=pack,
+                             compress_sa=compress_sa,
                              sa=sa if sa_sample_rate else None, **sa_kw)
     return SequenceIndex(fm, sa, bwt_arr, row, sigma, len(s), text_length,
                          mesh=mesh)

@@ -1,0 +1,304 @@
+"""Segmented incremental append: grow an index without a full rebuild.
+
+The paper builds one monolithic index per dataset; Sirén's *BWT for
+terabases* and the authors' follow-up *BWT on a Large Scale* instead build
+large BWTs from per-chunk structures that are merged — the natural shape
+for an index that must grow with its corpus.  This module is the query-time
+variant of that idea (LSM-tree style, as in Lucene-like search systems):
+
+* ``append(tokens)`` builds a *new per-segment FM-index* over just the new
+  text with the PR 2 fast builder — O(new segment), not O(corpus).
+* ``count`` sums per-segment counts (each an independent, embarrassingly
+  parallel backward search).
+* ``locate`` offsets per-segment positions by the segment's global offset
+  and merges the candidate sets.
+* ``compact`` folds runs of small adjacent segments into one rebuilt
+  segment, bounding per-query fan-out — the background-merge half of the
+  LSM playbook.
+
+Boundary semantics: a segment boundary is a *document* boundary.  Matches
+never span segments, exactly as matches never span the documents of a
+concatenated collection; relative to one monolithic index over the raw
+concatenation, the segmented answer differs only by occurrences crossing a
+segment boundary (and ``compact`` can only re-introduce those inside a
+merged run).  ``tests/test_segments.py`` asserts this equivalence exactly:
+segmented count == monolithic count − cross-boundary occurrences.
+
+All segments share one declared alphabet (``sigma``), so every segment's
+pad token sorts above every real token of *any* segment and a query over
+the global alphabet can never match padding (see
+``pipeline.prepare_tokens``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+
+import numpy as np
+
+from .dist_suffix_array import DistSAConfig
+from .pipeline import SequenceIndex, build_index
+
+CATALOG_FORMAT = "segmented_index_catalog"
+CATALOG_VERSION = 1
+
+
+@dataclasses.dataclass
+class Segment:
+    """One immutable index segment plus its placement in global coordinates."""
+
+    seg_id: int
+    offset: int            # global position of this segment's first token
+    n_tokens: int          # raw appended tokens (no sentinel, no padding)
+    index: SequenceIndex
+    tokens: np.ndarray     # retained corpus slice — compact() rebuild input
+
+
+class SegmentedIndex:
+    """An FM-index over a growing corpus, as a catalog of immutable segments.
+
+    ``sigma`` declares the global alphabet: all appended tokens must lie in
+    [1, sigma).  Build knobs (``sample_rate``, ``sa_sample_rate``,
+    ``sa_config``, ``pack``, ``compress_sa``) apply to every segment build.
+    Query interface (``count`` / ``locate``) matches ``SequenceIndex``, so
+    ``serving.engine.FMQueryServer`` serves a segmented index unchanged.
+    """
+
+    def __init__(self, sigma: int, *, sample_rate: int = 64,
+                 sa_sample_rate: int = 32,
+                 sa_config: DistSAConfig = DistSAConfig(),
+                 pack: bool | None = None, compress_sa: bool | None = None,
+                 segment_min_tokens: int | None = None):
+        if sigma < 2:
+            raise ValueError("sigma must cover at least one real token")
+        self.sigma = sigma
+        self.sample_rate = sample_rate
+        self.sa_sample_rate = sa_sample_rate
+        self.sa_config = sa_config
+        self.pack = pack
+        self.compress_sa = compress_sa
+        self.segment_min_tokens = segment_min_tokens  # compact() default
+        self.segments: list[Segment] = []
+        self._next_id = 0
+
+    @classmethod
+    def from_config(cls, sigma: int, cfg) -> "SegmentedIndex":
+        """Build from a BWTIndexConfig's index/lifecycle knobs (the config's
+        own ``sigma`` describes the full byte workload; segmented corpora
+        pass their actual alphabet)."""
+        return cls(
+            sigma, sample_rate=cfg.sample_rate,
+            sa_sample_rate=cfg.sa_sample_rate,
+            sa_config=DistSAConfig(
+                engine=cfg.engine, capacity_factor=cfg.capacity_factor,
+                qgram=cfg.qgram, qgram_words=cfg.qgram_words,
+                discard=cfg.discard, local_sort=cfg.local_sort,
+            ),
+            pack=cfg.pack, compress_sa=cfg.compress_sa,
+            segment_min_tokens=cfg.segment_min_tokens,
+        )
+
+    # -- growth --------------------------------------------------------------
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(s.n_tokens for s in self.segments)
+
+    def _build(self, tokens: np.ndarray) -> SequenceIndex:
+        return build_index(
+            tokens, sample_rate=self.sample_rate,
+            sa_config=self.sa_config, sa_sample_rate=self.sa_sample_rate,
+            pack=self.pack, sigma=self.sigma, compress_sa=self.compress_sa,
+        )
+
+    def append(self, tokens) -> Segment:
+        """Index new text as a fresh segment; O(len(tokens)) work.
+
+        ``tokens`` int32[m] in [1, sigma).  The new segment occupies global
+        positions [total_tokens, total_tokens + m).
+        """
+        tokens = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        if tokens.size == 0:
+            raise ValueError("cannot append an empty segment")
+        if tokens.min() < 1 or tokens.max() >= self.sigma:
+            raise ValueError(
+                f"tokens out of declared alphabet [1, {self.sigma})"
+            )
+        seg = Segment(self._next_id, self.total_tokens, len(tokens),
+                      self._build(tokens), tokens)
+        self._next_id += 1
+        self.segments.append(seg)
+        return seg
+
+    def compact(self, min_tokens: int | None = None) -> int:
+        """Merge runs of adjacent small segments into one via rebuild.
+
+        Segments smaller than ``min_tokens`` (None = the constructor's
+        ``segment_min_tokens`` default; every segment when that is also
+        None) are grouped into maximal adjacent runs; each run of >= 2 rebuilds as a
+        single segment over the concatenated run text.  Global coordinates
+        are preserved (runs are adjacent).  Returns the number of merges
+        performed.  Within a merged run, matches spanning the old internal
+        boundaries become visible — compaction only moves the answer
+        *closer* to the monolithic one.
+        """
+        if min_tokens is None:
+            min_tokens = self.segment_min_tokens
+        merged, out, run = 0, [], []
+
+        def close_run():
+            nonlocal merged
+            if len(run) >= 2:
+                toks = np.concatenate([s.tokens for s in run])
+                out.append(Segment(self._next_id_bump(), run[0].offset,
+                                   len(toks), self._build(toks), toks))
+                merged += 1
+            else:
+                out.extend(run)
+            run.clear()
+
+        for seg in self.segments:
+            if min_tokens is None or seg.n_tokens < min_tokens:
+                run.append(seg)
+            else:
+                close_run()
+                out.append(seg)
+        close_run()
+        self.segments = out
+        return merged
+
+    def _next_id_bump(self) -> int:
+        i = self._next_id
+        self._next_id += 1
+        return i
+
+    # -- queries -------------------------------------------------------------
+
+    def count(self, patterns) -> np.ndarray:
+        """Exact-match counts for int32[B, L] PAD-padded patterns: the sum
+        of independent per-segment counts (int64[B])."""
+        patterns = np.asarray(patterns, np.int32)
+        total = np.zeros(patterns.shape[0], np.int64)
+        for seg in self.segments:
+            total += np.asarray(seg.index.count(patterns), np.int64)
+        return total
+
+    def locate(self, patterns, k: int):
+        """First-k *global* occurrence positions per pattern.
+
+        Returns (positions int64[B, k] sorted ascending, ``total_tokens``
+        filling unused slots; counts int64[B] clipped to k).  The k kept
+        positions are the k smallest global positions among per-segment
+        candidates (each segment contributes its first k in SA order — the
+        same selection rule as the monolithic index applied per segment).
+        """
+        patterns = np.asarray(patterns, np.int32)
+        B = patterns.shape[0]
+        fill = self.total_tokens
+        cand = [np.full((B, 1), fill, np.int64)]
+        counts = np.zeros(B, np.int64)
+        for seg in self.segments:
+            pos, cnt = seg.index.locate(patterns, k)
+            pos, cnt = np.asarray(pos, np.int64), np.asarray(cnt, np.int64)
+            # only the first cnt[b] slots hold real (segment-local) positions
+            used = np.arange(k)[None, :] < cnt[:, None]
+            cand.append(np.where(used, pos + seg.offset, fill))
+            counts += cnt
+        allpos = np.sort(np.concatenate(cand, axis=1), axis=1)[:, :k]
+        if allpos.shape[1] < k:
+            allpos = np.pad(allpos, ((0, 0), (0, k - allpos.shape[1])),
+                            constant_values=fill)
+        return allpos, np.minimum(counts, k)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def catalog(self) -> list[dict]:
+        """JSON-able summary of the segment layout (id, offset, size)."""
+        return [
+            {"seg_id": s.seg_id, "offset": s.offset, "n_tokens": s.n_tokens}
+            for s in self.segments
+        ]
+
+    def save(self, directory: str) -> None:
+        """Persist catalog + every segment (index checkpoint AND raw tokens,
+        so a restored catalog can keep compacting).
+
+        Incremental: segments are immutable and ids never reused, so a
+        segment directory that already exists is skipped, and directories
+        orphaned by ``compact`` (no longer in the catalog) are deleted —
+        repeated append/compact/save cycles cost O(new segments) IO and the
+        directory tracks the live catalog exactly.
+        """
+        from .index_io import save_index
+
+        os.makedirs(directory, exist_ok=True)
+        live = set()
+        for seg in self.segments:
+            name = f"seg_{seg.seg_id:06d}"
+            live.add(name)
+            seg_dir = os.path.join(directory, name)
+            if os.path.exists(os.path.join(seg_dir, "tokens.npz")):
+                continue  # immutable + id-unique -> already persisted
+            save_index(seg_dir, seg.index)
+            np.savez(os.path.join(seg_dir, "tokens.npz"), tokens=seg.tokens)
+        for name in os.listdir(directory):
+            if name.startswith("seg_") and name not in live:
+                shutil.rmtree(os.path.join(directory, name))
+        cat = {
+            "format": CATALOG_FORMAT, "version": CATALOG_VERSION,
+            "sigma": self.sigma, "sample_rate": self.sample_rate,
+            "sa_sample_rate": self.sa_sample_rate,
+            "pack": self.pack, "compress_sa": self.compress_sa,
+            "segment_min_tokens": self.segment_min_tokens,
+            "sa_config": self.sa_config._asdict(),
+            "next_id": self._next_id, "segments": self.catalog(),
+        }
+        tmp = os.path.join(directory, "catalog.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(cat, f, indent=2)
+        os.replace(tmp, os.path.join(directory, "catalog.json"))
+
+    @classmethod
+    def load(cls, directory: str, **kwargs) -> "SegmentedIndex":
+        """Restore a saved segmented index (single-device segments).
+
+        Build knobs (sample_rate, pack, compress_sa, sa_config, ...) come
+        back from the catalog, so future appends/compactions build segments
+        exactly like the saved ones; ``kwargs`` override any of them.
+        Existing segments restore bit-identically via ``index_io``.
+        """
+        from .index_io import restore_index
+
+        with open(os.path.join(directory, "catalog.json")) as f:
+            cat = json.load(f)
+        if cat.get("format") != CATALOG_FORMAT:
+            raise ValueError(f"not a segment catalog: {directory}")
+        if cat.get("version", 0) > CATALOG_VERSION:
+            raise ValueError(
+                f"catalog version {cat['version']} > supported "
+                f"{CATALOG_VERSION}"
+            )
+        knobs = dict(
+            sample_rate=cat["sample_rate"],
+            sa_sample_rate=cat["sa_sample_rate"],
+            pack=cat.get("pack"), compress_sa=cat.get("compress_sa"),
+            segment_min_tokens=cat.get("segment_min_tokens"),
+            sa_config=DistSAConfig(**cat.get(
+                "sa_config", DistSAConfig()._asdict()
+            )),
+        )
+        knobs.update(kwargs)
+        self = cls(cat["sigma"], **knobs)
+        self._next_id = cat["next_id"]
+        for ent in cat["segments"]:
+            seg_dir = os.path.join(directory, f"seg_{ent['seg_id']:06d}")
+            index = restore_index(seg_dir)
+            with np.load(os.path.join(seg_dir, "tokens.npz")) as z:
+                tokens = z["tokens"]
+            assert len(tokens) == ent["n_tokens"], seg_dir
+            self.segments.append(Segment(ent["seg_id"], ent["offset"],
+                                         ent["n_tokens"], index, tokens))
+        return self

@@ -34,8 +34,12 @@ def _rank_impl_default() -> str:
 @functools.partial(jax.jit, static_argnames=("sigma", "block_rows", "interpret"))
 def char_histogram(tokens, sigma: int, *, block_rows: int = 8,
                    interpret: bool | None = None):
-    """Histogram of int32 tokens (pads with sigma, which lands out of range
-    and is dropped by construction — padded lanes count into a scratch bin)."""
+    """Histogram of token values: int32[n] -> int32[sigma].
+
+    Pallas kernel on TPU; ``interpret=None`` auto-selects interpret mode
+    off-TPU.  Inputs pad to ``block_rows * 128`` lanes with the value
+    ``sigma``, which lands out of range and is dropped by construction
+    (padded lanes count into a scratch bin)."""
     interpret = _interpret_default() if interpret is None else interpret
     unit = block_rows * 128
     n = tokens.shape[0]
@@ -50,8 +54,12 @@ def char_histogram(tokens, sigma: int, *, block_rows: int = 8,
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def rerank_scan(r1, r2, *, block: int = 512, interpret: bool | None = None):
-    """(ranks, num_groups) for sorted pairs; inputs padded with a strictly
-    larger tail pair so padding forms its own trailing group."""
+    """(ranks int32[n], num_groups int32 scalar) for sorted key pairs
+    ``r1``/``r2`` int32[n]: rank = index of each pair's first occurrence.
+
+    Pallas scan kernel (interpret mode auto-selected off-TPU); inputs pad to
+    ``block`` with a strictly larger tail pair so padding forms its own
+    trailing group, subtracted from ``num_groups`` before returning."""
     interpret = _interpret_default() if interpret is None else interpret
     n = r1.shape[0]
     pad = (-n) % block
@@ -92,8 +100,13 @@ def local_sort(operands, num_keys: int, *, engine: str = COMPARE,
                key_bits=None):
     """Stable local sort of key operands + payloads by the chosen engine
     (the single dispatch used by both the single-device builder and the
-    distributed sort engines).  Both engines are stable, so they are
-    interchangeable bit-for-bit."""
+    distributed sort engines).
+
+    ``operands``: tuple of equal-length 1-D arrays, the first ``num_keys``
+    of which are uint32/int32 sort keys (most-significant first).  Engine
+    ``"compare"`` = ``lax.sort``; ``"radix"`` = the LSD radix pipeline
+    below.  Both engines are stable, so they are interchangeable
+    bit-for-bit."""
     operands = tuple(operands)
     if engine == RADIX:
         if key_bits is None:
@@ -145,14 +158,21 @@ def radix_sort(operands, *, num_keys: int, key_bits, block: int = 1024,
 @functools.partial(jax.jit, static_argnames=("shift", "block", "interpret"))
 def radix_hist(keys, shift: int, *, block: int = 1024,
                interpret: bool | None = None):
-    """Per-block digit histograms; n must divide block (callers tile)."""
+    """Per-block 8-bit digit histograms: uint32[n] -> int32[n/block, 256]
+    of counts of ``(keys >> shift) & 0xFF``.  ``block`` must divide n
+    (callers tile); interpret mode auto-selected off-TPU."""
     interpret = _interpret_default() if interpret is None else interpret
     return radix_hist_pallas(keys, shift, block=block, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def rank_select(bwt_blocks, block_idx, c, cutoff, *, interpret: bool | None = None):
-    """In-block FM rank counts (scalar-prefetch gather kernel)."""
+    """In-block FM rank counts over unpacked symbols (scalar-prefetch
+    gather kernel; interpret mode auto-selected off-TPU).
+
+    ``bwt_blocks`` int32[n_blocks, r]; per query i the result counts
+    occurrences of symbol ``c[i]`` in the first ``cutoff[i]`` positions of
+    block ``block_idx[i]`` — all int32[B] -> int32[B]."""
     interpret = _interpret_default() if interpret is None else interpret
     return rank_select_pallas(
         bwt_blocks, block_idx, c, cutoff, interpret=interpret
@@ -165,9 +185,14 @@ def rank_select(bwt_blocks, block_idx, c, cutoff, *, interpret: bool | None = No
 def rank_packed(fused, block_idx, c, cutoff, *, bits: int, sigma: int,
                 queries_per_step: int = 8, impl: str | None = None):
     """Full rank queries (checkpoint base + in-block popcount) over the
-    fused packed layout.  ``impl``: None -> backend default ("pallas" on
-    TPU, "jnp" elsewhere); "interpret" runs the kernel in interpret mode
-    for parity testing.
+    fused packed layout: Occ(c_i, block_idx_i * r + cutoff_i) for each query.
+
+    ``fused`` int32[n_blocks, sigma + r*bits/32] rows of
+    [Occ checkpoint | packed words]; ``block_idx``/``c``/``cutoff``
+    int32[B] -> int32[B].  ``bits`` in {2, 4} is the packed field width.
+    ``impl``: None -> backend default ("pallas" on TPU, "jnp" popcount
+    fallback elsewhere); "interpret" runs the kernel in interpret mode for
+    parity testing.
     """
     impl = _rank_impl_default() if impl is None else impl
     if impl == "jnp":
@@ -190,7 +215,10 @@ def rank_packed(fused, block_idx, c, cutoff, *, bits: int, sigma: int,
 @functools.partial(jax.jit, static_argnames=("impl",))
 def rank_unpacked(bwt_blocks, block_idx, c, cutoff, *, impl: str | None = None):
     """Batched in-block rank counts over unpacked int32 blocks (the sigma>16
-    layout): scalar-prefetch kernel on TPU, vectorised gather elsewhere."""
+    layout): same contract as ``rank_select`` (int32[B] queries ->
+    int32[B] counts, NOT including the checkpoint base).  Dispatch:
+    scalar-prefetch Pallas kernel on TPU, vectorised jnp gather elsewhere;
+    "interpret" for parity testing."""
     impl = _rank_impl_default() if impl is None else impl
     if impl == "jnp":
         return ref.rank_select_ref(bwt_blocks, block_idx, c, cutoff)

@@ -1,7 +1,13 @@
-"""Serving launcher: build a (distributed) FM index over a corpus and serve
-batched count queries; optionally also serve LM decode.
+"""Serving launcher: build (or restore) a (distributed) FM index over a
+corpus and serve batched count queries; optionally checkpoint the built
+index so later launches skip construction entirely.
 
-    python -m repro.launch.serve --kind dna --n 65536 --batches 10
+    # build, checkpoint, serve
+    python -m repro.launch.serve --kind dna --n 65536 --ckpt-dir /tmp/idx
+
+    # restore the checkpoint (no build) and serve immediately
+    python -m repro.launch.serve --kind dna --n 65536 --ckpt-dir /tmp/idx \
+        --restore --batches 10
 """
 
 from __future__ import annotations
@@ -13,7 +19,9 @@ import numpy as np
 import jax
 
 
-def main():
+def main(argv=None):
+    from ..configs.bwt_index import CONFIG as icfg
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--kind", default="dna")
     ap.add_argument("--n", type=int, default=1 << 16)
@@ -21,21 +29,64 @@ def main():
     ap.add_argument("--batches", type=int, default=10)
     ap.add_argument("--pattern-len", type=int, default=16)
     ap.add_argument("--engine", default="bitonic")
-    args = ap.parse_args()
+    ap.add_argument("--ckpt-dir", default=icfg.ckpt_dir,
+                    help="checkpoint the built index here (index_io format)")
+    ap.add_argument("--ckpt-keep", type=int, default=icfg.ckpt_keep,
+                    help="checkpoint steps to retain under --ckpt-dir")
+    ap.add_argument("--restore", action="store_true",
+                    help="restore from --ckpt-dir instead of building")
+    args = ap.parse_args(argv)
 
     from ..core import alphabet as al
     from ..core.dist_suffix_array import DistSAConfig
     from ..core.fm_index import PAD
+    from ..core.index_io import (
+        describe_index,
+        latest_index_step,
+        restore_index,
+        save_index,
+    )
     from ..core.pipeline import build_index
     from ..data.corpus import corpus
 
-    toks = corpus(args.kind, args.n)
     ndev = len(jax.devices())
     mesh = jax.make_mesh((ndev,), ("parts",)) if ndev > 1 else None
-    t0 = time.time()
-    index = build_index(toks, mesh,
-                        sa_config=DistSAConfig(engine=args.engine))
-    print(f"index built over {len(toks)} tokens in {time.time() - t0:.1f}s")
+
+    if args.restore:
+        if not args.ckpt_dir:
+            ap.error("--restore requires --ckpt-dir")
+        info = describe_index(args.ckpt_dir)
+        # query patterns must be sampled from the corpus the index was
+        # actually built over — the manifest knows its raw length
+        if info.text_length - 1 != args.n:
+            print(
+                f"--n {args.n} != checkpointed corpus size "
+                f"{info.text_length - 1}; using the checkpoint's size"
+            )
+            args.n = info.text_length - 1
+        toks = corpus(args.kind, args.n)
+        t0 = time.time()
+        index = restore_index(args.ckpt_dir, mesh)
+        print(
+            f"restored {info.kind} index (n={info.length}, "
+            f"sigma={info.sigma}, bits={info.bits}) in {time.time() - t0:.1f}s"
+        )
+    else:
+        toks = corpus(args.kind, args.n)
+        t0 = time.time()
+        index = build_index(toks, mesh,
+                            sa_config=DistSAConfig(engine=args.engine))
+        print(f"index built over {len(toks)} tokens in {time.time() - t0:.1f}s")
+        if args.ckpt_dir:
+            t0 = time.time()
+            latest = latest_index_step(args.ckpt_dir)
+            step = save_index(args.ckpt_dir, index,
+                              step=0 if latest is None else latest + 1,
+                              keep=args.ckpt_keep)
+            print(
+                f"checkpointed to {args.ckpt_dir} step {step} "
+                f"in {time.time() - t0:.1f}s"
+            )
 
     s = al.append_sentinel(toks)
     rng = np.random.default_rng(0)

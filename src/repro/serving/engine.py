@@ -34,7 +34,12 @@ def generate(
     cache_dtype=None,
     sample: Callable | None = None,   # logits (B, V) -> token (B,)
 ) -> GenerateResult:
-    """Greedy (or custom-sampled) batched generation with a donated cache."""
+    """Greedy (or custom-sampled) batched generation with a donated cache.
+
+    ``prompts`` int32[B, prompt_len]; returns all B sequences extended to
+    ``prompt_len + max_new_tokens`` (int32) plus tokens/s.  The decode step
+    is one jit'd program reused every position; ``sample`` maps logits
+    float[B, V] -> token int[B] (None = argmax)."""
     B, prompt_len = prompts.shape
     total = prompt_len + max_new_tokens
     step = jax.jit(
@@ -128,8 +133,12 @@ class FMQueryServer:
 
     def submit(self, pattern: np.ndarray, kind: str = "count",
                k: int | None = None) -> int:
-        """Enqueue one query; returns its ticket.  ``k`` overrides the
-        server's locate_k for this request only."""
+        """Enqueue one query; returns its ticket (int, dense, per-server).
+
+        ``pattern`` is a 1-D int sequence over the index alphabet (values
+        in [1, sigma); no PAD — padding happens at flush when the bucket
+        shape is known).  ``k`` overrides the server's locate_k for this
+        request only."""
         if kind not in ("count", "locate"):
             raise ValueError(f"unknown query kind {kind!r}")
         t = self._next_ticket
@@ -142,7 +151,13 @@ class FMQueryServer:
 
     def flush(self) -> dict[int, FMQueryResult]:
         """Answer every queued request; returns {ticket: result} for this
-        flush (and records them in ``self.completed``)."""
+        flush (and records them in ``self.completed``).
+
+        Requests group into fixed (kind, pow2-batch, length-bucket) shapes,
+        PAD-padded, one ``index.count``/``index.locate`` dispatch per group
+        — so steady state reuses a small set of jit programs.  Works over
+        any index exposing that interface (``SequenceIndex``, a restored
+        checkpoint, or a ``SegmentedIndex``)."""
         from ..core.fm_index import PAD
 
         queue, self._queue = self._queue, []
@@ -178,7 +193,8 @@ class FMQueryServer:
         return results
 
     def count(self, queries: list[np.ndarray]) -> np.ndarray:
-        """Batched exact-match counts for raw variable-length queries.
+        """Batched exact-match counts for raw variable-length queries
+        (list of 1-D int sequences) -> int64[len(queries)].
 
         Flushes the whole queue; results for previously submit()ed tickets
         stay retrievable via ``self.completed``."""
@@ -187,9 +203,10 @@ class FMQueryServer:
         return np.array([res[t].count for t in tickets], np.int64)
 
     def locate(self, queries: list[np.ndarray], k: int | None = None):
-        """First-k occurrence positions per query: list of int32 arrays.
-        ``k`` applies to these queries only (default: the server's
-        locate_k)."""
+        """First-k occurrence positions per query: list of 1-D int
+        sequences -> list of int arrays (ascending positions, length =
+        min(#occurrences, k)).  ``k`` applies to these queries only
+        (default: the server's locate_k)."""
         tickets = [self.submit(q, "locate", k=k) for q in queries]
         res = self.flush()
         return [res[t].positions for t in tickets]

@@ -68,10 +68,11 @@ def _unflatten(tree_like, flat: dict[str, np.ndarray]):
 
 class Checkpointer:
     def __init__(self, directory: str, keep: int = 3):
+        # created lazily on first save: constructing a Checkpointer to
+        # *read* (restore / latest_step) must not touch the filesystem
         self.dir = directory
         self.keep = keep
         self._thread: threading.Thread | None = None
-        os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
 
@@ -95,6 +96,7 @@ class Checkpointer:
             self._thread = None
 
     def _write(self, step: int, flat, extra):
+        os.makedirs(self.dir, exist_ok=True)
         name = f"step_{step:08d}"
         tmp = os.path.join(self.dir, name + ".tmp")
         final = os.path.join(self.dir, name)
@@ -117,6 +119,8 @@ class Checkpointer:
     # -- restore ------------------------------------------------------------
 
     def all_steps(self) -> list[int]:
+        if not os.path.isdir(self.dir):
+            return []
         out = []
         for d in os.listdir(self.dir):
             if d.startswith("step_") and not d.endswith(".tmp"):
@@ -127,11 +131,12 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, tree_like, step: int | None = None, shardings=None):
-        """Restore into the structure of ``tree_like``.  With ``shardings``
-        (a matching pytree of NamedSharding), arrays are placed directly
-        onto the new mesh — elastic re-mesh is free because the on-disk
-        format is unsharded."""
+    def restore_raw(self, step: int | None = None):
+        """(flat {keypath: np.ndarray}, meta) without a structure template.
+
+        For callers that reconstruct typed objects from a saved manifest
+        (``core/index_io`` rebuilds FM indexes whose array set and shapes
+        are only known from the checkpoint itself)."""
         if step is None:
             step = self.latest_step()
         if step is None:
@@ -139,9 +144,17 @@ class Checkpointer:
         path = os.path.join(self.dir, f"step_{step:08d}")
         with np.load(os.path.join(path, "arrays.npz")) as z:
             flat = {k: z[k] for k in z.files}
-        tree = _unflatten(tree_like, flat)
         with open(os.path.join(path, "meta.json")) as f:
             meta = json.load(f)
+        return flat, meta
+
+    def restore(self, tree_like, step: int | None = None, shardings=None):
+        """Restore into the structure of ``tree_like``.  With ``shardings``
+        (a matching pytree of NamedSharding), arrays are placed directly
+        onto the new mesh — elastic re-mesh is free because the on-disk
+        format is unsharded."""
+        flat, meta = self.restore_raw(step)
+        tree = _unflatten(tree_like, flat)
         # recast to the reference dtypes (bf16 round-trips via f32 on disk)
         tree = jax.tree_util.tree_map(
             lambda x, ref: np.asarray(x).astype(ref.dtype), tree, tree_like

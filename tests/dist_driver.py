@@ -400,8 +400,67 @@ def scenario_elastic():
     print("elastic re-mesh ok")
 
 
+def scenario_index_io():
+    """Index lifecycle across mesh shapes: a distributed index checkpointed
+    from an 8-shard mesh restores and answers bit-identically on 8, 4, and
+    1 device(s), and a single-device checkpoint restores onto a mesh."""
+    import tempfile
+
+    from repro.core.fm_index import PAD
+    from repro.core.index_io import describe_index, restore_index, save_index
+    from repro.core.pipeline import build_index
+
+    assert DEVICES >= 8
+    rng = np.random.default_rng(3)
+    r = 8
+    n = 8 * 8 * r  # padded length divides parts * r for parts in {8, 4, 1}
+    toks = rng.integers(1, 5, n - 1).astype(np.int32)
+    mesh8 = jax.make_mesh((8,), (AXIS,), devices=jax.devices()[:8])
+    idx = build_index(toks, mesh8, sample_rate=r, sa_sample_rate=4)
+
+    B, L, k = 12, 6, 64
+    pats = np.full((B, L), PAD, np.int32)
+    lens = rng.integers(1, L + 1, B)
+    for b in range(B):
+        st = rng.integers(0, n - 1 - lens[b])
+        pats[b, : lens[b]] = toks[st : st + lens[b]]
+    want_cnt = np.asarray(idx.count(pats))
+    want_pos, want_k = (np.asarray(a) for a in idx.locate(pats, k))
+
+    with tempfile.TemporaryDirectory() as d:
+        save_index(d, idx)
+        info = describe_index(d)
+        assert info.kind == "dist_fm" and info.sa_val_bits > 0, info
+        mesh4 = jax.make_mesh((4,), (AXIS,), devices=jax.devices()[:4])
+        for mesh in (mesh8, mesh4, None):
+            rest = restore_index(d, mesh)
+            assert np.array_equal(np.asarray(rest.count(pats)), want_cnt), mesh
+            pos, cnt = (np.asarray(a) for a in rest.locate(pats, k))
+            assert np.array_equal(pos, want_pos), mesh
+            assert np.array_equal(cnt, want_k), mesh
+
+    # single-device checkpoint -> distributed restore
+    idx1 = build_index(toks, None, sample_rate=r, sa_sample_rate=4)
+    with tempfile.TemporaryDirectory() as d:
+        save_index(d, idx1)
+        # restoring onto a mesh needs the padded length to divide parts * r
+        # (n = 512 here, so 4- and 8-shard meshes both qualify)
+        for p in (4, 8):
+            assert idx1.length % (p * r) == 0, (idx1.length, p, r)
+        rest = restore_index(
+            d, jax.make_mesh((4,), (AXIS,), devices=jax.devices()[:4])
+        )
+        assert np.array_equal(np.asarray(rest.count(pats)),
+                              np.asarray(idx1.count(pats)))
+        pos, cnt = (np.asarray(a) for a in rest.locate(pats, k))
+        pos1, cnt1 = (np.asarray(a) for a in idx1.locate(pats, k))
+        assert np.array_equal(pos, pos1) and np.array_equal(cnt, cnt1)
+    print("index_io re-mesh ok")
+
+
 SCENARIOS = {
     "pipeline": scenario_pipeline,
+    "index_io": scenario_index_io,
     "elastic": scenario_elastic,
     "bitonic_sort": scenario_bitonic_sort,
     "shift": scenario_shift,

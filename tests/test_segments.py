@@ -1,0 +1,241 @@
+"""Segmented incremental append: exact parity with a monolithic index
+(modulo documented boundary semantics), compaction, global coordinates,
+catalog save/load, and serving through FMQueryServer."""
+
+import numpy as np
+import pytest
+
+from repro.core.fm_index import PAD
+from repro.core.pipeline import build_index
+from repro.core.segments import SegmentedIndex
+from repro.serving.engine import FMQueryServer
+
+SIGMA = 7  # tokens 1..6
+CHUNKS = (300, 150, 75, 512)
+
+
+def _corpus(rng, sizes=CHUNKS, sigma=SIGMA):
+    chunks = [rng.integers(1, sigma, n).astype(np.int32) for n in sizes]
+    full = np.concatenate(chunks)
+    offsets = np.cumsum([0] + [len(c) for c in chunks])[:-1]
+    return chunks, full, offsets
+
+
+def _patterns(rng, full, B=24, L=5):
+    pats = np.full((B, L), PAD, np.int32)
+    lens = rng.integers(1, L + 1, B)
+    for b in range(B):
+        st = rng.integers(0, len(full) - lens[b])
+        pats[b, : lens[b]] = full[st : st + lens[b]]
+    return pats, lens
+
+
+def _occurrences(full, pat):
+    """(within-segment positions, #cross-boundary) numpy oracle."""
+    m = len(pat)
+    w = np.lib.stride_tricks.sliding_window_view(full, m)
+    return np.nonzero((w == pat).all(axis=1))[0]
+
+
+def _split_hits(hits, offsets, m):
+    cross = [p for p in hits if any(p < o < p + m for o in offsets[1:])]
+    within = [p for p in hits if p not in cross]
+    return within, cross
+
+
+@pytest.fixture(scope="module")
+def built():
+    rng = np.random.default_rng(5)
+    chunks, full, offsets = _corpus(rng)
+    seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8)
+    for c in chunks:
+        seg.append(c)
+    mono = build_index(full, sample_rate=16, sa_sample_rate=8)
+    return rng, chunks, full, offsets, seg, mono
+
+
+class TestAppendParity:
+    def test_count_equals_monolithic_minus_boundary(self, built):
+        """The exact boundary-semantics statement: segmented count ==
+        monolithic count - occurrences spanning a segment boundary."""
+        rng, _, full, offsets, seg, mono = built
+        pats, lens = _patterns(rng, full)
+        mono_cnt = np.asarray(mono.count(pats), np.int64)
+        seg_cnt = seg.count(pats)
+        for b in range(pats.shape[0]):
+            hits = _occurrences(full, pats[b, : lens[b]])
+            _, cross = _split_hits(hits, offsets, lens[b])
+            assert seg_cnt[b] == mono_cnt[b] - len(cross), b
+
+    def test_locate_global_positions(self, built):
+        """Global positions == the monolithic position set restricted to
+        within-segment occurrences."""
+        rng, _, full, offsets, seg, _ = built
+        pats, lens = _patterns(rng, full)
+        k = 2 * len(full)  # no clipping: full position sets must match
+        pos, cnt = seg.locate(pats, k)
+        for b in range(pats.shape[0]):
+            hits = _occurrences(full, pats[b, : lens[b]])
+            within, _ = _split_hits(hits, offsets, lens[b])
+            assert sorted(pos[b, : cnt[b]]) == sorted(within), b
+
+    def test_offsets_and_catalog(self, built):
+        _, chunks, _, offsets, seg, _ = built
+        cat = seg.catalog()
+        assert [c["offset"] for c in cat] == list(offsets)
+        assert [c["n_tokens"] for c in cat] == [len(c) for c in chunks]
+        assert seg.total_tokens == sum(len(c) for c in chunks)
+
+    def test_declared_alphabet_enforced(self):
+        seg = SegmentedIndex(4)
+        with pytest.raises(ValueError, match="alphabet"):
+            seg.append(np.array([1, 2, 7], np.int32))
+        with pytest.raises(ValueError, match="empty"):
+            seg.append(np.array([], np.int32))
+
+    def test_token_absent_from_one_segment(self):
+        """A query token present globally but absent from some segment must
+        count 0 there (and not match that segment's padding)."""
+        seg = SegmentedIndex(10, sample_rate=16, sa_sample_rate=8)
+        seg.append(np.full(50, 2, np.int32))       # alphabet {2}
+        seg.append(np.array([5] * 60, np.int32))   # alphabet {5}
+        pats = np.full((2, 2), PAD, np.int32)
+        pats[0, 0] = 5
+        pats[1, :] = (2, 5)  # spans only a boundary -> 0 by semantics
+        got = seg.count(pats)
+        assert got[0] == 60 and got[1] == 0, got
+
+
+class TestCompact:
+    def test_compact_all_equals_monolithic(self):
+        rng = np.random.default_rng(9)
+        chunks, full, _ = _corpus(rng)
+        seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8)
+        for c in chunks:
+            seg.append(c)
+        mono = build_index(full, sample_rate=16, sa_sample_rate=8)
+        assert seg.compact() == 1 and len(seg.segments) == 1
+        pats, lens = _patterns(rng, full)
+        assert np.array_equal(seg.count(pats),
+                              np.asarray(mono.count(pats), np.int64))
+        k = 2 * len(full)
+        pos, cnt = seg.locate(pats, k)
+        for b in range(pats.shape[0]):
+            hits = _occurrences(full, pats[b, : lens[b]])
+            assert sorted(pos[b, : cnt[b]]) == sorted(hits), b
+
+    def test_compact_threshold_preserves_large_segments(self):
+        rng = np.random.default_rng(10)
+        seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8)
+        sizes = (40, 30, 600, 25, 20)
+        for n in sizes:
+            seg.append(rng.integers(1, SIGMA, n).astype(np.int32))
+        pats, _ = _patterns(rng, np.concatenate([s.tokens for s in seg.segments]))
+        before = seg.count(pats)
+        # merge only segments under 100 tokens: [40+30], [600], [25+20]
+        assert seg.compact(min_tokens=100) == 2
+        assert [s.n_tokens for s in seg.segments] == [70, 600, 45]
+        assert [s.offset for s in seg.segments] == [0, 70, 670]
+        after = seg.count(pats)
+        # merged runs may only ADD previously-missed boundary matches
+        assert np.all(after >= before)
+
+    def test_compact_noop_on_single_segment(self):
+        rng = np.random.default_rng(11)
+        seg = SegmentedIndex(SIGMA)
+        seg.append(rng.integers(1, SIGMA, 100).astype(np.int32))
+        assert seg.compact() == 0 and len(seg.segments) == 1
+
+
+class TestLifecycle:
+    def test_save_load_roundtrip(self, built, tmp_path):
+        rng, chunks, full, _, seg, _ = built
+        pats, _ = _patterns(rng, full)
+        seg.save(str(tmp_path))
+        loaded = SegmentedIndex.load(str(tmp_path))
+        assert loaded.sigma == seg.sigma
+        assert loaded.catalog() == seg.catalog()
+        assert np.array_equal(seg.count(pats), loaded.count(pats))
+        p0, c0 = seg.locate(pats, 64)
+        p1, c1 = loaded.locate(pats, 64)
+        assert np.array_equal(p0, p1) and np.array_equal(c0, c1)
+        # the catalog keeps growing after restore
+        loaded.append(rng.integers(1, SIGMA, 64).astype(np.int32))
+        assert loaded.total_tokens == seg.total_tokens + 64
+
+    def test_catalog_persists_build_knobs(self, tmp_path):
+        """Knobs round-trip through catalog.json so post-restore compactions
+        build segments exactly like the saved ones; kwargs still override."""
+        rng = np.random.default_rng(12)
+        seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8,
+                             pack=False, compress_sa=False,
+                             segment_min_tokens=128)
+        seg.append(rng.integers(1, SIGMA, 60).astype(np.int32))
+        seg.append(rng.integers(1, SIGMA, 70).astype(np.int32))
+        seg.save(str(tmp_path))
+        loaded = SegmentedIndex.load(str(tmp_path))
+        assert (loaded.pack, loaded.compress_sa) == (False, False)
+        assert loaded.segment_min_tokens == 128
+        assert loaded.sa_config == seg.sa_config
+        # both segments are under the persisted threshold -> default compact
+        # merges them, rebuilt with the persisted knobs
+        assert loaded.compact() == 1
+        assert loaded.segments[0].index.fm.bits == 0       # pack=False kept
+        assert loaded.segments[0].index.fm.sa_val_bits == 0
+        # explicit override wins over the catalog
+        loaded2 = SegmentedIndex.load(str(tmp_path), sample_rate=32)
+        assert loaded2.sample_rate == 32
+
+    def test_from_config(self):
+        from repro.configs.bwt_index import reduced
+
+        cfg = reduced()
+        seg = SegmentedIndex.from_config(SIGMA, cfg)
+        assert seg.sample_rate == cfg.sample_rate
+        assert seg.sa_sample_rate == cfg.sa_sample_rate
+        assert seg.segment_min_tokens == cfg.segment_min_tokens
+        assert seg.sa_config.engine == cfg.engine
+        rng = np.random.default_rng(13)
+        seg.append(rng.integers(1, SIGMA, 200).astype(np.int32))
+        assert seg.count(np.array([[1]], np.int32))[0] > 0
+
+    def test_save_is_incremental_and_gcs_orphans(self, tmp_path):
+        """Re-saving skips persisted immutable segments; compact() orphans
+        are removed so the directory tracks the live catalog."""
+        import os
+
+        rng = np.random.default_rng(14)
+        seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8)
+        seg.append(rng.integers(1, SIGMA, 60).astype(np.int32))
+        seg.append(rng.integers(1, SIGMA, 70).astype(np.int32))
+        seg.save(str(tmp_path))
+        first = {d: os.path.getmtime(tmp_path / d / "tokens.npz")
+                 for d in ("seg_000000", "seg_000001")}
+        seg.save(str(tmp_path))  # no-op for existing segments
+        for d, t in first.items():
+            assert os.path.getmtime(tmp_path / d / "tokens.npz") == t, d
+        assert seg.compact() == 1
+        seg.save(str(tmp_path))
+        dirs = sorted(d for d in os.listdir(tmp_path) if d.startswith("seg_"))
+        assert dirs == ["seg_000002"]  # old segment dirs GC'd
+        loaded = SegmentedIndex.load(str(tmp_path))
+        assert loaded.catalog() == seg.catalog()
+
+    def test_load_rejects_foreign_dir(self, tmp_path):
+        (tmp_path / "catalog.json").write_text('{"format": "other"}')
+        with pytest.raises(ValueError, match="catalog"):
+            SegmentedIndex.load(str(tmp_path))
+
+    def test_served_through_query_server(self, built):
+        """FMQueryServer speaks SequenceIndex's interface; a SegmentedIndex
+        drops in unchanged."""
+        rng, _, full, offsets, seg, _ = built
+        server = FMQueryServer(seg, length_buckets=(4, 8), max_batch=16)
+        queries = [full[o : o + 3] for o in (0, 10, 400, 700)]
+        got = server.count(queries)
+        for q, g in zip(queries, got):
+            hits = _occurrences(full, q)
+            within, _ = _split_hits(hits, offsets, len(q))
+            assert g == len(within)
+        pos = server.locate([full[:4]], k=8)[0]
+        assert 0 in pos
