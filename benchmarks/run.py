@@ -8,6 +8,8 @@ Prints ``name,us_per_call,derived`` CSV rows (plus per-bench headers).
   sortbench  DESIGN.md §4 sort-engine ablation (collective volume, derived;
              fused-key and radix local-sort variants)
   fmbench    FM-index serving throughput + rank_select kernel
+  servebench async frontend load test (closed/open/overload); writes
+             BENCH_serve.json
   roofline   index-build + LM roofline terms (from dry-run JSONs, if present)
 """
 
@@ -59,12 +61,13 @@ def _build_json_section():
 
 
 def main() -> None:
-    from . import fm_query_bench, sort_bench, table2_bwt
+    from . import fm_query_bench, serve_bench, sort_bench, table2_bwt
 
     table2_bwt.main([])
     _build_json_section()
     sort_bench.main()
     fm_query_bench.main([])
+    serve_bench.main([])
     _roofline_section()
 
 

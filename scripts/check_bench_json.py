@@ -1,0 +1,155 @@
+"""Schema + smoke-regression checks for ``experiments/BENCH_*.json``.
+
+Two modes:
+
+* ``python scripts/check_bench_json.py`` — validate every committed
+  ``experiments/BENCH_*.json`` against the conventions in
+  docs/BENCHMARKS.md: top level ``{"bench", "backend", "rows"}``, rows are
+  non-empty dicts keyed by ``input``/``scenario``, every ``*_match``
+  correctness bit is true, wall-time fields are finite and non-negative.
+  A malformed committed artifact fails CI loudly instead of silently
+  corrupting the perf trajectory.
+
+* ``... --baseline A.json --candidate B.json [--tol 3]`` — regression-gate
+  a fresh smoke run against the committed baseline.  Rows are matched by
+  id (``scenario`` or ``input``); for each shared numeric metric,
+  lower-is-better fields (``*_ms``, ``*_s``) may grow at most ``tol``x and
+  higher-is-better fields (``*qps``, ``*speedup``) may shrink at most
+  ``tol``x.  Absolute floors (a few ms / a few qps) keep timer noise on
+  near-zero smoke metrics from flaking CI; a genuine 3x regression on a
+  metric that matters clears them easily.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import sys
+
+EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+# absolute slack added on top of the ratio tolerance, per unit suffix —
+# sized for cross-machine noise (the committed baseline comes from a dev
+# box, the candidate from a CI runner): single-digit-ms smoke latencies
+# jitter far more than 3x under a different CPU + background load, while a
+# real regression (serialization bug, lost batching) blows past ratio+floor
+FLOORS = {"_ms": 50.0, "_s": 0.5, "qps": 150.0, "speedup": 0.2}
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench_json: FAIL: {msg}")
+    sys.exit(1)
+
+
+def row_id(row: dict) -> str | None:
+    return row.get("scenario") or row.get("input")
+
+
+def check_schema(path: str) -> dict:
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        fail(f"{path}: unreadable JSON ({e})")
+    for key, typ in (("bench", str), ("backend", str), ("rows", list)):
+        if not isinstance(payload.get(key), typ):
+            fail(f"{path}: missing/invalid top-level {key!r}")
+    if not payload["rows"]:
+        fail(f"{path}: empty rows")
+    for i, row in enumerate(payload["rows"]):
+        if not isinstance(row, dict):
+            fail(f"{path}: rows[{i}] is not an object")
+        if row_id(row) is None:
+            fail(f"{path}: rows[{i}] has neither 'scenario' nor 'input'")
+        for key, val in row.items():
+            if key.endswith("_match") and val is not True:
+                fail(f"{path}: rows[{i}].{key} = {val!r} (correctness bit "
+                     "must be true)")
+            if (key.endswith(("_s", "_ms")) and isinstance(val, (int, float))
+                    and (not math.isfinite(val) or val < 0)):
+                fail(f"{path}: rows[{i}].{key} = {val!r} (bad wall time)")
+    return payload
+
+
+# load-generator knobs, not measurements — a slower candidate machine
+# legitimately picks a lower arrival rate, so these must not be gated
+KNOB_KEYS = {"target_qps"}
+
+
+def _direction(key: str) -> str | None:
+    """'lower' / 'higher' / None (not a perf metric)."""
+    if key in KNOB_KEYS:
+        return None
+    if key.endswith(("qps", "speedup")):
+        return "higher"
+    if key.endswith(("_ms", "_s")):
+        return "lower"
+    return None
+
+
+def _floor(key: str) -> float:
+    for suffix, floor in FLOORS.items():
+        if key.endswith(suffix):
+            return floor
+    return 0.0
+
+
+def compare(baseline: dict, candidate: dict, tol: float) -> None:
+    base_rows = {row_id(r): r for r in baseline["rows"]}
+    cand_rows = {row_id(r): r for r in candidate["rows"]}
+    shared = sorted(set(base_rows) & set(cand_rows))
+    if not shared:
+        fail("no shared row ids between baseline and candidate")
+    compared = 0
+    for rid in shared:
+        b, c = base_rows[rid], cand_rows[rid]
+        for key, bval in b.items():
+            direction = _direction(key)
+            cval = c.get(key)
+            if (direction is None or not isinstance(bval, (int, float))
+                    or not isinstance(cval, (int, float))
+                    or isinstance(bval, bool) or isinstance(cval, bool)):
+                continue
+            compared += 1
+            floor = _floor(key)
+            if direction == "lower" and cval > bval * tol + floor:
+                fail(f"row {rid!r}: {key} regressed {bval:.4g} -> "
+                     f"{cval:.4g} (> {tol}x + {floor})")
+            if direction == "higher" and cval < bval / tol - floor:
+                fail(f"row {rid!r}: {key} regressed {bval:.4g} -> "
+                     f"{cval:.4g} (< 1/{tol}x - {floor})")
+    if not compared:
+        fail("no comparable numeric metrics in shared rows")
+    print(f"check_bench_json: OK ({len(shared)} shared rows, "
+          f"{compared} metrics within {tol}x)")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", help="committed BENCH_*.json")
+    ap.add_argument("--candidate", help="fresh (smoke) BENCH_*.json")
+    ap.add_argument("--tol", type=float, default=3.0,
+                    help="max allowed regression ratio")
+    args = ap.parse_args(argv)
+
+    if bool(args.baseline) != bool(args.candidate):
+        ap.error("--baseline and --candidate go together")
+    if args.baseline:
+        compare(check_schema(args.baseline), check_schema(args.candidate),
+                args.tol)
+        return
+
+    paths = sorted(glob.glob(os.path.join(EXPERIMENTS, "BENCH_*.json")))
+    if not paths:
+        fail(f"no BENCH_*.json under {os.path.abspath(EXPERIMENTS)}")
+    for path in paths:
+        payload = check_schema(path)
+        print(f"check_bench_json: OK {os.path.basename(path)} "
+              f"({payload['bench']}, {len(payload['rows'])} rows)")
+
+
+if __name__ == "__main__":
+    main()

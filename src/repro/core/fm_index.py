@@ -254,6 +254,25 @@ def occ(index: FMIndex, c: jax.Array, p: jax.Array) -> jax.Array:
                      p[None] if p.ndim == 0 else p)[0]
 
 
+def _interval_step(c, sp, ep, sigma: int, rank):
+    """One backward-search transition, shared by the monolithic and the
+    stacked (segment-parallel) paths — any divergence here would break
+    their bit-identity.  ``rank(c_safe, p)`` maps a symbol/position pair to
+    ``C[c] + Occ(c, p)``; all arrays are elementwise-broadcastable.
+
+    PAD steps are no-ops; an already-empty interval stays empty; an
+    out-of-alphabet symbol (unknown to the index) empties it."""
+    in_alphabet = (c >= 1) & (c < sigma)
+    valid = in_alphabet & (ep > sp)
+    c_safe = jnp.where(in_alphabet, c, 0)
+    nsp = rank(c_safe, sp)
+    nep = rank(c_safe, ep)
+    return (
+        jnp.where(valid, nsp, sp),
+        jnp.where(valid, nep, jnp.where((c != PAD) & ~in_alphabet, sp, ep)),
+    )
+
+
 def backward_search_batch(
     index: FMIndex, patterns: jax.Array
 ) -> tuple[jax.Array, jax.Array]:
@@ -265,18 +284,11 @@ def backward_search_batch(
     """
     B = patterns.shape[0]
 
+    def rank(c, p):
+        return index.c_array[c] + occ_batch(index, c, p)
+
     def step(state, c):
-        sp, ep = state
-        in_alphabet = (c >= 1) & (c < index.sigma)
-        valid = in_alphabet & (ep > sp)
-        c_safe = jnp.where(in_alphabet, c, 0)
-        nsp = index.c_array[c_safe] + occ_batch(index, c_safe, sp)
-        nep = index.c_array[c_safe] + occ_batch(index, c_safe, ep)
-        # PAD steps are no-ops; an already-empty interval stays empty;
-        # an out-of-alphabet symbol (unknown to the index) empties it
-        sp = jnp.where(valid, nsp, sp)
-        ep = jnp.where(valid, nep, jnp.where((c != PAD) & ~in_alphabet, sp, ep))
-        return (sp, ep), None
+        return _interval_step(c, *state, index.sigma, rank), None
 
     # process right-to-left; PADs sit on the right so they come first and
     # are skipped by ``valid``
@@ -302,13 +314,16 @@ def count(index: FMIndex, patterns: jax.Array) -> jax.Array:
 
 
 def sample_lookup(marks, mark_ranks, vals, rows, *, val_bits: int = 0,
-                  val_scale: int = 1):
+                  val_scale: int = 1, idx_offset=0):
     """(marked, value) of the SA sample at each row (value garbage when
-    unmarked).  Raw-array form shared with the distributed index.
+    unmarked).  Raw-array form shared with the distributed index and the
+    stacked segment-parallel path.
 
     ``rows`` int32[B]; ``val_bits`` > 0 decodes the bit-packed value stream
     (value = packed quotient * ``val_scale``, the sampling stride); 0 reads
-    raw int32 values.
+    raw int32 values.  ``idx_offset`` shifts the value-stream index (the
+    stacked path concatenates per-segment value arrays and passes each
+    lane's segment base).
     """
     w = rows // 32
     b = (rows % 32).astype(jnp.uint32)
@@ -317,7 +332,7 @@ def sample_lookup(marks, mark_ranks, vals, rows, *, val_bits: int = 0,
     below = lax.population_count(
         word & ((jnp.uint32(1) << b) - jnp.uint32(1))
     )
-    idx = mark_ranks[w] + below.astype(jnp.int32)
+    idx = mark_ranks[w] + below.astype(jnp.int32) + idx_offset
     if val_bits:
         val = unpack_sa_value(vals, idx, val_bits) * val_scale
     else:
@@ -331,19 +346,49 @@ def _sample_lookup(index: FMIndex, rows: jax.Array):
                          val_scale=index.sa_sample_rate)
 
 
+def packed_symbol(fused, blk, j, *, sigma: int, bits: int) -> jax.Array:
+    """Decode symbol ``j`` of fused row ``blk`` from the packed words —
+    the one packed-layout decode, shared by the monolithic and stacked
+    paths."""
+    fpw = 32 // bits
+    word = fused[blk, sigma + j // fpw]
+    w = lax.bitcast_convert_type(word, jnp.uint32)
+    sh = ((j % fpw) * bits).astype(jnp.uint32)
+    return ((w >> sh) & jnp.uint32((1 << bits) - 1)).astype(jnp.int32)
+
+
 def bwt_symbol(index: FMIndex, rows: jax.Array) -> jax.Array:
     """bwt[rows] batched: rows int32[B] -> symbols int32[B] — extracted
     from packed words when bit-packed, so the locate walk touches only the
     compact layout."""
     if not index.bits:
         return index.bwt[rows]
-    r, bits = index.sample_rate, index.bits
-    fpw = 32 // bits
-    j = rows % r
-    word = index.fused[rows // r, index.sigma + j // fpw]
-    w = lax.bitcast_convert_type(word, jnp.uint32)
-    sh = ((j % fpw) * bits).astype(jnp.uint32)
-    return ((w >> sh) & jnp.uint32((1 << bits) - 1)).astype(jnp.int32)
+    r = index.sample_rate
+    return packed_symbol(index.fused, rows // r, rows % r,
+                         sigma=index.sigma, bits=index.bits)
+
+
+def _locate_walk(n_steps: int, rows, valid, lookup, lf_next):
+    """The locate LF-walk, shared by the monolithic and stacked paths —
+    any divergence here would break their bit-identity.  Each lane walks
+    ``rows`` toward its nearest SA-sampled row: ``lookup(rows)`` ->
+    (marked, sampled value), ``lf_next(rows)`` -> LF-mapped rows.  Returns
+    flat positions (garbage where ``~valid``)."""
+
+    def body(_, st):
+        rows, pos, steps, done = st
+        marked, val = lookup(rows)
+        pos = jnp.where(marked & ~done, val + steps, pos)
+        done = done | marked
+        rows = jnp.where(done, rows, lf_next(rows))
+        steps = steps + jnp.where(done, 0, 1)
+        return rows, pos, steps, done
+
+    zeros = jnp.zeros(rows.shape[0], jnp.int32)
+    _, pos, _, _ = lax.fori_loop(
+        0, n_steps, body, (rows, zeros, zeros, ~valid)
+    )
+    return pos
 
 
 @functools.partial(jax.jit, static_argnames=("k",))
@@ -366,23 +411,264 @@ def locate(
     valid = (rows < ep[:, None]).reshape(-1)
     rows = jnp.where(valid, rows.reshape(-1), 0)
 
-    def body(_, st):
-        rows, pos, steps, done = st
-        marked, val = _sample_lookup(index, rows)
-        pos = jnp.where(marked & ~done, val + steps, pos)
-        done = done | marked
+    def lf_next(rows):
         c = bwt_symbol(index, rows)
-        nxt = index.c_array[c] + occ_batch(index, c, rows)
-        rows = jnp.where(done, rows, nxt)
-        steps = steps + jnp.where(done, 0, 1)
-        return rows, pos, steps, done
+        return index.c_array[c] + occ_batch(index, c, rows)
 
-    zeros = jnp.zeros(B * k, jnp.int32)
-    _, pos, _, _ = lax.fori_loop(
-        0, index.sa_sample_rate, body, (rows, zeros, zeros, ~valid)
-    )
+    pos = _locate_walk(index.sa_sample_rate, rows, valid,
+                       lambda rows: _sample_lookup(index, rows), lf_next)
     out = jnp.where(valid, pos, index.n).reshape(B, k)
     return jnp.sort(out, axis=1), jnp.minimum(jnp.maximum(ep - sp, 0), k)
+
+
+# -- segment-parallel stacked queries ----------------------------------------
+#
+# A SegmentedIndex answers a query by asking every live segment.  Done
+# naively that is one jit dispatch per segment per backward-search step; the
+# stacked layout below pads every segment's fused rows to one bucket shape
+# (power-of-two block count) and concatenates them row-wise, so the whole
+# catalog answers through a SINGLE kernels/ops rank call per step — the
+# per-query work is identical element-wise to the sequential path, so the
+# results are bit-identical (asserted in tests/test_segments.py).
+
+
+def _next_pow2(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class StackedFMIndex:
+    """S per-segment FM-indexes padded to one bucket shape.
+
+    ``fused``/``blocks`` rows of all segments concatenate along axis 0
+    (segment s owns rows [s*blocks_pad, s*blocks_pad + n_blocks[s])), so a
+    flat query vector carrying a segment id per lane addresses the whole
+    catalog in one gather.  Bucket shapes (``seg_pad`` segments x
+    ``blocks_pad`` blocks, both powers of two) keep the jit cache stable as
+    segments append and compact.  Pad segments have length 0 (their search
+    interval starts empty) and pad blocks are never addressed (block ids
+    clamp to the true per-segment ``n_blocks``).  SA-sample values are
+    stored raw (packed streams are decoded at stack time) so one decode
+    path serves every segment.
+    """
+
+    fused: jax.Array | None    # int32[S*NB, sigma + W]     (packed layout)
+    blocks: jax.Array | None   # int32[S*NB, r]             (unpacked layout)
+    occ: jax.Array | None      # int32[S, NB, sigma]        (unpacked layout)
+    c_array: jax.Array         # int32[S, sigma]
+    n_blocks: jax.Array        # int32[S] true per-segment block counts
+    lengths: jax.Array         # int32[S] true per-segment text lengths
+    sa_marks: jax.Array | None       # int32[S*MW] (segment-major)
+    sa_mark_ranks: jax.Array | None  # int32[S*MW] per-segment cumsums
+    sa_vals: jax.Array | None        # int32[S*MV] raw (decoded) SA values
+    n_seg: jax.Array    # int32 scalar: real segment count (<= seg_pad) —
+                        # a LEAF, not static aux: appending a segment into
+                        # spare bucket capacity must not recompile
+    seg_pad: int        # static: padded segment count S
+    blocks_pad: int     # static: padded per-segment block count NB
+    sample_rate: int    # static
+    sigma: int          # static
+    bits: int           # static
+    sa_sample_rate: int  # static (0 = no locate)
+
+    def tree_flatten(self):
+        return (
+            (self.fused, self.blocks, self.occ, self.c_array, self.n_blocks,
+             self.lengths, self.sa_marks, self.sa_mark_ranks, self.sa_vals,
+             self.n_seg),
+            (self.seg_pad, self.blocks_pad, self.sample_rate,
+             self.sigma, self.bits, self.sa_sample_rate),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def stack_fm_indexes(
+    fms: list[FMIndex], *, seg_pad: int | None = None,
+    blocks_pad: int | None = None,
+) -> StackedFMIndex:
+    """Assemble single-device FM-indexes into one stacked bucket layout.
+
+    All indexes must agree on (sigma, sample_rate, bits, sa_sample_rate) —
+    segments built through one ``SegmentedIndex`` do by construction (the
+    declared alphabet reserves the pad slot, see ``pipeline.prepare_tokens``).
+    Raises ``ValueError`` on a mixed catalog (e.g. segments restored from a
+    pre-uniform-alphabet checkpoint); callers fall back to the sequential
+    path.  ``seg_pad``/``blocks_pad`` override the power-of-two bucket
+    defaults (must be >= the real sizes).
+    """
+    if not fms:
+        raise ValueError("cannot stack an empty catalog")
+    f0 = fms[0]
+    sig = (f0.sigma, f0.sample_rate, f0.bits, f0.sa_sample_rate)
+    for fm in fms:
+        if not isinstance(fm, FMIndex):
+            raise ValueError(f"cannot stack {type(fm).__name__}")
+        if (fm.sigma, fm.sample_rate, fm.bits, fm.sa_sample_rate) != sig:
+            raise ValueError(
+                "mixed segment layouts: "
+                f"{(fm.sigma, fm.sample_rate, fm.bits, fm.sa_sample_rate)} "
+                f"!= {sig}"
+            )
+    sigma, r, bits, srate = sig
+    S = seg_pad or _next_pow2(len(fms))
+    NB = blocks_pad or _next_pow2(max(fm.n_blocks for fm in fms))
+    if S < len(fms) or NB < max(fm.n_blocks for fm in fms):
+        raise ValueError("bucket shape smaller than the catalog")
+
+    fused = blocks = occ = None
+    if bits:
+        W = f0.fused.shape[1]
+        fused_np = np.zeros((S * NB, W), np.int32)
+        for i, fm in enumerate(fms):
+            fused_np[i * NB : i * NB + fm.n_blocks] = np.asarray(fm.fused)
+        fused = jnp.asarray(fused_np)
+    else:
+        blocks_np = np.full((S * NB, r), PAD, np.int32)
+        occ_np = np.zeros((S, NB, sigma), np.int32)
+        for i, fm in enumerate(fms):
+            nb = fm.n_blocks
+            blocks_np[i * NB : i * NB + nb] = (
+                np.asarray(fm.bwt).reshape(nb, r)
+            )
+            occ_np[i, :nb] = np.asarray(fm.occ_samples)[:-1]
+        blocks, occ = jnp.asarray(blocks_np), jnp.asarray(occ_np)
+
+    c_np = np.zeros((S, sigma), np.int32)
+    nb_np = np.ones(S, np.int32)       # pad segments clamp blk to 0
+    len_np = np.zeros(S, np.int32)     # pad segments start with ep == 0
+    for i, fm in enumerate(fms):
+        c_np[i] = np.asarray(fm.c_array)
+        nb_np[i] = fm.n_blocks
+        len_np[i] = fm.length
+
+    sa_marks = sa_mark_ranks = sa_vals = None
+    if srate:
+        MW = -(-(NB * r) // 32)
+        MV = -(-(NB * r) // srate)
+        marks_np = np.zeros((S, MW), np.int32)
+        ranks_np = np.zeros((S, MW), np.int32)
+        vals_np = np.zeros((S, MV), np.int32)
+        for i, fm in enumerate(fms):
+            m = np.asarray(fm.sa_marks)
+            marks_np[i, : m.shape[0]] = m
+            ranks_np[i, : m.shape[0]] = np.asarray(fm.sa_mark_ranks)
+            nvals = -(-fm.length // srate)  # sampled values are 0, s, 2s, ...
+            if fm.sa_val_bits:
+                raw = np.asarray(unpack_sa_value(
+                    fm.sa_vals, jnp.arange(nvals, dtype=jnp.int32),
+                    fm.sa_val_bits,
+                )) * srate
+            else:
+                raw = np.asarray(fm.sa_vals)[:nvals]
+            vals_np[i, : raw.shape[0]] = raw
+        sa_marks, sa_mark_ranks, sa_vals = (
+            jnp.asarray(marks_np.reshape(-1)),
+            jnp.asarray(ranks_np.reshape(-1)),
+            jnp.asarray(vals_np.reshape(-1)),
+        )
+
+    return StackedFMIndex(
+        fused, blocks, occ, jnp.asarray(c_np), jnp.asarray(nb_np),
+        jnp.asarray(len_np), sa_marks, sa_mark_ranks, sa_vals,
+        jnp.asarray(len(fms), jnp.int32), S, NB, r, sigma, bits, srate,
+    )
+
+
+def _stacked_occ_batch(st: StackedFMIndex, seg, c, p):
+    """Occ(c_i, p_i) inside segment seg_i — flat int32[Q] lanes, one
+    kernels/ops dispatch for the whole catalog (the fan-out hot path)."""
+    r = st.sample_rate
+    blk = jnp.minimum(p // r, st.n_blocks[seg] - 1)
+    cut = p - blk * r
+    row = seg * st.blocks_pad + blk
+    if st.bits:
+        return ops.rank_packed(st.fused, row, c, cut,
+                               bits=st.bits, sigma=st.sigma)
+    base = st.occ[seg, blk, c]
+    return base + ops.rank_unpacked(st.blocks, row, c, cut)
+
+
+def _stacked_backward_search(st: StackedFMIndex, patterns: jax.Array):
+    """(sp, ep) int32[S, B]: every pattern against every segment, two rank
+    dispatches per scan step (``_interval_step`` — the exact transition of
+    ``backward_search_batch`` — over lanes flattened to segments x batch).
+    """
+    S, B = st.seg_pad, patterns.shape[0]
+    seg = jnp.repeat(jnp.arange(S, dtype=jnp.int32), B)
+
+    def rank(c, p):
+        cf, pf = c.reshape(-1), p.reshape(-1)
+        return (st.c_array[seg, cf]
+                + _stacked_occ_batch(st, seg, cf, pf)).reshape(S, B)
+
+    def step(state, c):
+        cB = jnp.broadcast_to(c[None, :], (S, B))
+        return _interval_step(cB, *state, st.sigma, rank), None
+
+    init = (jnp.zeros((S, B), jnp.int32),
+            jnp.broadcast_to(st.lengths[:, None], (S, B)))
+    (sp, ep), _ = lax.scan(step, init, patterns.T[::-1])
+    return sp, ep
+
+
+@jax.jit
+def count_stacked(st: StackedFMIndex, patterns: jax.Array) -> jax.Array:
+    """Per-segment exact-match counts, int32[S, B] for int32[B, m]
+    PAD-padded patterns; row s is bit-identical to ``count`` on segment s
+    alone (pad-segment rows are all zero)."""
+    sp, ep = _stacked_backward_search(st, patterns)
+    return jnp.maximum(ep - sp, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def locate_stacked(
+    st: StackedFMIndex, patterns: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Per-segment first-k locate: (positions int32[S, B, k] segment-local,
+    sorted, filled with the segment length; counts int32[S, B] clipped to
+    k).  Row s is bit-identical to ``locate`` on segment s alone; the
+    caller offsets to global coordinates and merges."""
+    if st.sa_sample_rate == 0:
+        raise ValueError("catalog stacked without SA samples — no locate")
+    sp, ep = _stacked_backward_search(st, patterns)
+    S, B = sp.shape
+    seg = jnp.repeat(jnp.arange(S, dtype=jnp.int32), B * k)
+    rows = sp[:, :, None] + jnp.arange(k, dtype=jnp.int32)[None, None, :]
+    valid = (rows < ep[:, :, None]).reshape(-1)
+    rows = jnp.where(valid, rows.reshape(-1), 0)
+
+    # per-segment SA-sample strides in the flat (segment-major) arrays:
+    # pseudo-row seg*MW*32 + row lands on segment seg's mark words, and
+    # idx_offset shifts into its slice of the value stream
+    MW = st.sa_marks.shape[0] // st.seg_pad
+    MV = st.sa_vals.shape[0] // st.seg_pad
+
+    def lookup(rows):
+        return sample_lookup(st.sa_marks, st.sa_mark_ranks, st.sa_vals,
+                             seg * (MW * 32) + rows, idx_offset=seg * MV)
+
+    def lf_next(rows):
+        r = st.sample_rate
+        blk = seg * st.blocks_pad + rows // r
+        if st.bits:
+            c = packed_symbol(st.fused, blk, rows % r,
+                              sigma=st.sigma, bits=st.bits)
+        else:
+            c = st.blocks[blk, rows % r]
+        return st.c_array[seg, c] + _stacked_occ_batch(st, seg, c, rows)
+
+    pos = _locate_walk(st.sa_sample_rate, rows, valid, lookup, lf_next)
+    fill = jnp.repeat(st.lengths, B * k)
+    out = jnp.where(valid, pos, fill).reshape(S, B, k)
+    return (jnp.sort(out, axis=2),
+            jnp.minimum(jnp.maximum(ep - sp, 0), k))
 
 
 def locate_naive(index: FMIndex, sa: jax.Array, pattern: jax.Array) -> jax.Array:

@@ -70,7 +70,8 @@ class SequenceIndex:
 
 
 def prepare_tokens(
-    tokens: np.ndarray, multiple: int, sigma: int | None = None
+    tokens: np.ndarray, multiple: int, sigma: int | None = None,
+    reserve_pad: bool | None = None,
 ) -> tuple[np.ndarray, int]:
     """Sentinel-terminate and pad to a multiple; returns (padded, sigma).
 
@@ -79,15 +80,29 @@ def prepare_tokens(
     (placed at the shared sigma) sorts above every real token of *any* of
     them — required by the segmented index, where a query may carry tokens
     absent from this particular segment.
+
+    ``reserve_pad`` keeps the pad slot in the alphabet even when no padding
+    tokens are appended.  Default (None) reserves it exactly for
+    declared-``sigma`` builds, so every such index lands on the *same*
+    effective sigma (and therefore the same fused-row layout) regardless of
+    its length — the invariant the stacked segment-parallel query path
+    relies on (``fm_index.stack_fm_indexes``).  Note this costs one
+    alphabet slot: a declared sigma=16 build lands on 17 and falls out of
+    the 4-bit packed layout; pass ``reserve_pad=False`` to opt out when the
+    index will never be stacked.
     """
     s = al.append_sentinel(np.asarray(tokens, dtype=np.int32))
     data_sigma = al.sigma_of(s)
-    if sigma is not None and sigma < data_sigma:
+    declared = sigma is not None
+    if declared and sigma < data_sigma:
         raise ValueError(f"tokens exceed declared alphabet {sigma}")
+    if reserve_pad is None:
+        reserve_pad = declared
     sigma = max(data_sigma, sigma or 0)
     pad = (-len(s)) % multiple
     if pad:
         s = np.concatenate([s, np.full(pad, sigma, np.int32)])
+    if pad or reserve_pad:
         sigma += 1
     return s, sigma
 
@@ -104,6 +119,7 @@ def build_index(
     fast: bool = True,
     sigma: int | None = None,
     compress_sa: bool | None = None,
+    reserve_pad: bool | None = None,
 ) -> SequenceIndex:
     """Build a (distributed) BWT/FM index over raw tokens (no sentinel).
 
@@ -113,7 +129,9 @@ def build_index(
     ``build_fm_index`` (None = bit-pack when the alphabet fits);
     ``compress_sa`` as in ``build_sa_samples`` (None = bit-pack the SA
     sample whenever it shrinks it); ``sigma`` declares a minimum alphabet
-    (see ``prepare_tokens`` — the segmented index passes its global one).
+    (see ``prepare_tokens`` — the segmented index passes its global one;
+    ``reserve_pad`` as there, None = reserve the pad slot for declared
+    alphabets so same-``sigma`` builds share one layout).
 
     ``sa_config`` also carries the build-engine knobs (qgram / discard /
     local_sort) for both the distributed and the single-device path; the
@@ -128,7 +146,7 @@ def build_index(
     sa_kw = dict(sa_sample_rate=sa_sample_rate) if sa_sample_rate else {}
 
     if mesh is None:
-        s, sigma = prepare_tokens(tokens, sample_rate, sigma)
+        s, sigma = prepare_tokens(tokens, sample_rate, sigma, reserve_pad)
         s_dev = jnp.asarray(s)
         stats = None
         if fast:
@@ -147,7 +165,8 @@ def build_index(
                              build_stats=stats)
 
     parts = mesh.shape[sa_config.axis]
-    s, sigma = prepare_tokens(tokens, parts * sample_rate, sigma)
+    s, sigma = prepare_tokens(tokens, parts * sample_rate, sigma,
+                              reserve_pad)
     s_dev = jnp.asarray(s)
     cfg = sa_config
     for attempt in range(max_retries):

@@ -40,6 +40,7 @@ import shutil
 import numpy as np
 
 from .dist_suffix_array import DistSAConfig
+from .fm_index import count_stacked, locate_stacked, stack_fm_indexes
 from .pipeline import SequenceIndex, build_index
 
 CATALOG_FORMAT = "segmented_index_catalog"
@@ -71,7 +72,8 @@ class SegmentedIndex:
                  sa_sample_rate: int = 32,
                  sa_config: DistSAConfig = DistSAConfig(),
                  pack: bool | None = None, compress_sa: bool | None = None,
-                 segment_min_tokens: int | None = None):
+                 segment_min_tokens: int | None = None,
+                 parallel: bool | None = None):
         if sigma < 2:
             raise ValueError("sigma must cover at least one real token")
         self.sigma = sigma
@@ -81,8 +83,13 @@ class SegmentedIndex:
         self.pack = pack
         self.compress_sa = compress_sa
         self.segment_min_tokens = segment_min_tokens  # compact() default
+        # segment-parallel query fan-out: None = auto (stacked dispatch
+        # whenever >= 2 stackable segments), False = always sequential,
+        # True = require the stacked path (raise if segments can't stack)
+        self.parallel = parallel
         self.segments: list[Segment] = []
         self._next_id = 0
+        self._stacked_cache: object | None = None
 
     @classmethod
     def from_config(cls, sigma: int, cfg) -> "SegmentedIndex":
@@ -99,6 +106,7 @@ class SegmentedIndex:
             ),
             pack=cfg.pack, compress_sa=cfg.compress_sa,
             segment_min_tokens=cfg.segment_min_tokens,
+            parallel=cfg.serve_parallel_segments,
         )
 
     # -- growth --------------------------------------------------------------
@@ -131,6 +139,7 @@ class SegmentedIndex:
                       self._build(tokens), tokens)
         self._next_id += 1
         self.segments.append(seg)
+        self._stacked_cache = None
         return seg
 
     def compact(self, min_tokens: int | None = None) -> int:
@@ -168,6 +177,7 @@ class SegmentedIndex:
                 out.append(seg)
         close_run()
         self.segments = out
+        self._stacked_cache = None
         return merged
 
     def _next_id_bump(self) -> int:
@@ -177,10 +187,41 @@ class SegmentedIndex:
 
     # -- queries -------------------------------------------------------------
 
+    def _stacked(self):
+        """The stacked bucket layout for segment-parallel fan-out, or None
+        when the sequential path applies (parallel=False, < 2 segments, or
+        an unstackable mixed catalog under parallel=None).  Cached; append
+        and compact invalidate.  Bucket shapes are powers of two, so the
+        cache rebuild after an append usually re-hits the same jit programs.
+        """
+        if self.parallel is False or not self.segments:
+            return None
+        if self.parallel is None and len(self.segments) < 2:
+            return None
+        if self._stacked_cache is None:
+            try:
+                self._stacked_cache = stack_fm_indexes(
+                    [s.index.fm for s in self.segments]
+                )
+            except ValueError:
+                if self.parallel:
+                    raise
+                self._stacked_cache = False  # unstackable: remember that
+        return self._stacked_cache or None
+
     def count(self, patterns) -> np.ndarray:
         """Exact-match counts for int32[B, L] PAD-padded patterns: the sum
-        of independent per-segment counts (int64[B])."""
+        of independent per-segment counts (int64[B]).
+
+        With segment-parallel fan-out (``parallel``, default auto) all
+        segments are answered by ONE stacked kernel dispatch per
+        backward-search step instead of a per-segment Python loop —
+        bit-identical per-segment counts, so an identical sum."""
         patterns = np.asarray(patterns, np.int32)
+        st = self._stacked()
+        if st is not None:
+            per = np.asarray(count_stacked(st, patterns), np.int64)
+            return per[: int(st.n_seg)].sum(axis=0)
         total = np.zeros(patterns.shape[0], np.int64)
         for seg in self.segments:
             total += np.asarray(seg.index.count(patterns), np.int64)
@@ -194,15 +235,30 @@ class SegmentedIndex:
         positions are the k smallest global positions among per-segment
         candidates (each segment contributes its first k in SA order — the
         same selection rule as the monolithic index applied per segment).
+        Fan-out is segment-parallel (one stacked dispatch) whenever
+        ``parallel`` allows; the per-segment candidates are bit-identical
+        to the sequential path, so the merged answer is too.
         """
         patterns = np.asarray(patterns, np.int32)
+        st = self._stacked()
+        if st is not None:
+            pos_all, cnt_all = locate_stacked(st, patterns, k)
+            pos_all = np.asarray(pos_all, np.int64)
+            cnt_all = np.asarray(cnt_all, np.int64)
+            per_seg = (
+                (pos_all[i], cnt_all[i]) for i in range(int(st.n_seg))
+            )
+        else:
+            per_seg = (
+                tuple(np.asarray(a, np.int64)
+                      for a in seg.index.locate(patterns, k))
+                for seg in self.segments
+            )
         B = patterns.shape[0]
         fill = self.total_tokens
         cand = [np.full((B, 1), fill, np.int64)]
         counts = np.zeros(B, np.int64)
-        for seg in self.segments:
-            pos, cnt = seg.index.locate(patterns, k)
-            pos, cnt = np.asarray(pos, np.int64), np.asarray(cnt, np.int64)
+        for seg, (pos, cnt) in zip(self.segments, per_seg):
             # only the first cnt[b] slots hold real (segment-local) positions
             used = np.arange(k)[None, :] < cnt[:, None]
             cand.append(np.where(used, pos + seg.offset, fill))

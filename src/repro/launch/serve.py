@@ -8,6 +8,10 @@ index so later launches skip construction entirely.
     # restore the checkpoint (no build) and serve immediately
     python -m repro.launch.serve --kind dna --n 65536 --ckpt-dir /tmp/idx \
         --restore --batches 10
+
+    # async frontend: admission-controlled queue, per-bucket p50/p99 SLOs
+    python -m repro.launch.serve --kind dna --n 65536 --serve-async \
+        --queue-depth 4096 --max-wait-ms 2 --slo-p99-ms 50
 """
 
 from __future__ import annotations
@@ -35,6 +39,21 @@ def main(argv=None):
                     help="checkpoint steps to retain under --ckpt-dir")
     ap.add_argument("--restore", action="store_true",
                     help="restore from --ckpt-dir instead of building")
+    ap.add_argument("--serve-async", action="store_true",
+                    help="serve through the admission-controlled async "
+                         "frontend (per-request submits, SLO metrics)")
+    ap.add_argument("--queue-depth", type=int, default=icfg.serve_queue_depth,
+                    help="admission bound: submits beyond this shed")
+    ap.add_argument("--max-wait-ms", type=float,
+                    default=icfg.serve_max_wait_ms,
+                    help="flush coalescing window for the async frontend")
+    ap.add_argument("--slo-p99-ms", type=float, default=icfg.serve_slo_p99_ms,
+                    help="per-bucket p99 latency target for count queries")
+    ap.add_argument("--slo-p99-ms-locate", type=float,
+                    default=icfg.serve_slo_p99_ms_locate,
+                    help="per-bucket p99 latency target for locate queries")
+    ap.add_argument("--locate-frac", type=float, default=0.2,
+                    help="fraction of async requests issued as locate")
     args = ap.parse_args(argv)
 
     from ..core import alphabet as al
@@ -90,6 +109,42 @@ def main(argv=None):
 
     s = al.append_sentinel(toks)
     rng = np.random.default_rng(0)
+
+    if args.serve_async:
+        import json
+
+        from ..serving.engine import FMQueryServer
+        from ..serving.frontend import AsyncQueryFrontend, Rejected
+
+        server = FMQueryServer.from_config(index, icfg)
+        can_locate = getattr(index.fm, "sa_sample_rate", 0) != 0
+        with AsyncQueryFrontend(
+            server, max_queue=args.queue_depth, max_wait_ms=args.max_wait_ms,
+            slo_p99_ms={"count": args.slo_p99_ms,
+                        "locate": args.slo_p99_ms_locate},
+        ) as fe:
+            futs = []
+            for _ in range(args.batches * args.batch):
+                L = int(rng.integers(3, args.pattern_len))
+                st = int(rng.integers(0, args.n - L - 1))
+                kind = ("locate" if can_locate
+                        and rng.random() < args.locate_frac else "count")
+                futs.append(fe.submit(s[st : st + L], kind))
+            hits = shed = 0
+            for f in futs:
+                r = f.result()
+                if isinstance(r, Rejected):
+                    shed += 1
+                else:
+                    hits += r.count
+            m = fe.metrics()
+        print(json.dumps(m, indent=2))
+        print(
+            f"async-serve: {m['completed']} answered "
+            f"({shed} shed) at {m['qps']:.0f} qps, total_hits={hits}"
+        )
+        return
+
     lats = []
     total = 0
     for _ in range(args.batches):

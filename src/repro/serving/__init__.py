@@ -1,4 +1,6 @@
 """Serving layer: batched LM generation (cached decode, optional fp8 KV)
-and FM-index query serving."""
+and FM-index query serving (sync micro-batching server + async
+admission-controlled frontend)."""
 
 from .engine import FMQueryServer, GenerateResult, generate  # noqa: F401
+from .frontend import AsyncQueryFrontend, Rejected  # noqa: F401

@@ -98,16 +98,22 @@ class FMQueryServer:
     """
 
     def __init__(self, index, *, length_buckets=(8, 16, 32, 64),
-                 max_batch: int = 256, locate_k: int = 16):
+                 max_batch: int = 256, locate_k: int = 16,
+                 completed_cap: int = 1 << 16):
         self.index = index
         self.length_buckets = tuple(sorted(length_buckets))
         self.max_batch = max_batch
         self.locate_k = locate_k
         self._queue: list[tuple[int, str, np.ndarray, int]] = []
         self._next_ticket = 0
-        # every answered request, across flushes — so a convenience wrapper
-        # flushing the queue never strands an earlier submit()'s result
+        # answered requests retained across flushes — so a convenience
+        # wrapper flushing the queue never strands an earlier submit()'s
+        # result.  Bounded: beyond ``completed_cap`` the oldest tickets
+        # evict (dict preserves insertion = ticket order), so a long-running
+        # server (e.g. behind the async frontend, which consumes results
+        # from flush()'s return value) holds O(cap) results, not O(lifetime)
         self.completed: dict[int, FMQueryResult] = {}
+        self.completed_cap = completed_cap
         self.stats = FMServerStats()
 
     @classmethod
@@ -190,6 +196,8 @@ class FMQueryServer:
         self.stats.seconds += time.perf_counter() - t0
         self.stats.queries += len(queue)
         self.completed.update(results)
+        while len(self.completed) > self.completed_cap:
+            self.completed.pop(next(iter(self.completed)))
         return results
 
     def count(self, queries: list[np.ndarray]) -> np.ndarray:

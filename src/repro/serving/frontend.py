@@ -1,0 +1,301 @@
+"""Async serving frontend: admission-controlled request queue in front of
+``FMQueryServer``, with max-batch/max-wait coalescing and per-bucket
+latency SLO accounting.
+
+``FMQueryServer.flush`` is a synchronous call: whoever holds the thread
+pays for the whole batch, there is no backpressure, and a traffic spike
+just grows the Python queue until memory runs out.  This module is the
+serving layer the paper's cloud story implies (§1: many users querying one
+distributed index):
+
+* ``submit`` is non-blocking and thread-safe; it returns a
+  ``concurrent.futures.Future`` resolving to an ``FMQueryResult``.
+* **Admission control**: the queue is bounded (``max_queue``); submits
+  beyond the bound resolve immediately to a ``Rejected`` result — overload
+  degrades by shedding load, never by OOMing or stalling admitted work.
+* A background worker coalesces admitted requests into flushes: it fires
+  as soon as ``max_batch`` requests are waiting OR the oldest request has
+  waited ``max_wait_ms`` — the standard batching latency/throughput knob
+  (same playbook as LM decode micro-batching).
+* **Per-bucket latency accounting**: every completed request records its
+  enqueue-to-resolve latency under its jit bucket (kind + padded length);
+  ``metrics()`` exports p50/p99 per bucket plus shed/throughput counters,
+  checked against per-kind p99 SLO targets.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+
+import numpy as np
+
+from .engine import FMQueryServer
+
+
+@dataclasses.dataclass(frozen=True)
+class Rejected:
+    """Admission-control shed marker: the request was NOT answered.
+
+    Returned (inside the future) instead of ``FMQueryResult`` when the
+    queue is at ``max_queue`` depth.  Clients retry with backoff or drop.
+    """
+
+    kind: str                   # "count" | "locate" — mirrors the request
+    reason: str = "queue_full"
+
+
+@dataclasses.dataclass
+class _BucketStats:
+    """Latency accounting for one jit bucket (kind, padded length)."""
+
+    slo_p99_ms: float | None
+    window: dataclasses.InitVar[int] = 4096
+    completed: int = 0
+    violations: int = 0         # individual latencies over the SLO target
+    latencies_ms: deque = None
+
+    def __post_init__(self, window):
+        self.latencies_ms = deque(maxlen=window)
+
+    def record(self, lat_ms: float) -> None:
+        self.completed += 1
+        self.latencies_ms.append(lat_ms)
+        if self.slo_p99_ms is not None and lat_ms > self.slo_p99_ms:
+            self.violations += 1
+
+    def summary(self) -> dict:
+        lat = np.asarray(self.latencies_ms, np.float64)
+        p50 = float(np.percentile(lat, 50)) if lat.size else 0.0
+        p99 = float(np.percentile(lat, 99)) if lat.size else 0.0
+        out = {
+            "completed": self.completed,
+            "p50_ms": p50,
+            "p99_ms": p99,
+            "slo_p99_ms": self.slo_p99_ms,
+            "slo_ok": (p99 <= self.slo_p99_ms
+                       if self.slo_p99_ms is not None and lat.size else None),
+            "violations": self.violations,
+        }
+        return out
+
+
+class AsyncQueryFrontend:
+    """Admission-controlled async frontend over an ``FMQueryServer``.
+
+        server = FMQueryServer(index)
+        with AsyncQueryFrontend(server, max_queue=4096) as fe:
+            fut = fe.submit(pattern, "count")
+            ...
+            res = fut.result()          # FMQueryResult | Rejected
+            print(fe.metrics())
+
+    One background worker owns all index dispatches (jax calls never race);
+    producers only touch the bounded queue under a lock.  ``stop()`` (or
+    leaving the ``with`` block) drains admitted requests before returning —
+    an admitted future always resolves.
+    """
+
+    def __init__(self, server: FMQueryServer, *, max_queue: int = 8192,
+                 max_wait_ms: float = 2.0, max_batch: int | None = None,
+                 slo_p99_ms: dict[str, float] | None = None,
+                 window: int = 4096, autostart: bool = True):
+        self.server = server
+        self.max_queue = max_queue
+        self.max_wait_s = max_wait_ms / 1e3
+        self.max_batch = server.max_batch if max_batch is None else max_batch
+        self.slo_p99_ms = dict(slo_p99_ms or {})  # per kind: {"count": ms}
+        self.window = window
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        # (t_enqueue, pattern, kind, k, future) — append under the lock only
+        self._pending: deque = deque()
+        self._stop = False
+        self._thread: threading.Thread | None = None
+        self._t_start = time.perf_counter()
+        self.admitted = 0
+        self.rejected = 0
+        self.completed = 0
+        self.flushes = 0
+        self._buckets: dict[str, _BucketStats] = {}
+        if autostart:
+            self.start()
+
+    @classmethod
+    def from_config(cls, server: FMQueryServer, cfg,
+                    **kw) -> "AsyncQueryFrontend":
+        """Build from a BWTIndexConfig's frontend knobs."""
+        kw.setdefault("max_queue", cfg.serve_queue_depth)
+        kw.setdefault("max_wait_ms", cfg.serve_max_wait_ms)
+        kw.setdefault("slo_p99_ms", {"count": cfg.serve_slo_p99_ms,
+                                     "locate": cfg.serve_slo_p99_ms_locate})
+        return cls(server, **kw)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def start(self) -> None:
+        """Start the flush worker (idempotent)."""
+        with self._lock:
+            if self._thread is not None:
+                return
+            self._stop = False
+            self._thread = threading.Thread(
+                target=self._run, name="fm-frontend-flush", daemon=True
+            )
+            self._thread.start()
+
+    def stop(self) -> None:
+        """Drain admitted requests, then stop the worker.  Safe to call
+        with the worker never started (pending requests are flushed
+        inline so admitted futures still resolve)."""
+        with self._cond:
+            self._stop = True
+            self._cond.notify_all()
+            thread, self._thread = self._thread, None
+        if thread is not None:
+            thread.join()
+        else:
+            self._drain_inline()
+
+    def __enter__(self) -> "AsyncQueryFrontend":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- producer side -------------------------------------------------------
+
+    def submit(self, pattern, kind: str = "count",
+               k: int | None = None) -> Future:
+        """Enqueue one query; never blocks on the index.
+
+        Returns a future resolving to ``FMQueryResult`` (admitted) or
+        ``Rejected`` (queue at ``max_queue`` — already resolved on return).
+        ``pattern``/``kind``/``k`` as in ``FMQueryServer.submit``."""
+        if kind not in ("count", "locate"):
+            raise ValueError(f"unknown query kind {kind!r}")
+        fut: Future = Future()
+        pat = np.asarray(pattern, np.int32)
+        with self._cond:
+            if self._stop:
+                raise RuntimeError("frontend is stopped")
+            if len(self._pending) >= self.max_queue:
+                self.rejected += 1
+                fut.set_result(Rejected(kind))
+                return fut
+            self.admitted += 1
+            self._pending.append((time.perf_counter(), pat, kind, k, fut))
+            self._cond.notify()
+        return fut
+
+    @property
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self._pending)
+
+    # -- worker side ---------------------------------------------------------
+
+    def _take_batch(self) -> list | None:
+        """Block until a flushable batch exists (coalescing), the whole
+        pending queue once max-batch/max-wait trips; None = stopped and
+        drained."""
+        with self._cond:
+            while not self._pending and not self._stop:
+                self._cond.wait()
+            if not self._pending:
+                return None                   # stopping, nothing left
+            while len(self._pending) < self.max_batch and not self._stop:
+                oldest = self._pending[0][0]
+                remaining = oldest + self.max_wait_s - time.perf_counter()
+                if remaining <= 0:
+                    break
+                self._cond.wait(remaining)
+            batch = list(self._pending)
+            self._pending.clear()
+            return batch
+
+    def _run(self) -> None:
+        while True:
+            batch = self._take_batch()
+            if batch is None:
+                return
+            self._flush_batch(batch)
+
+    def _drain_inline(self) -> None:
+        with self._cond:
+            batch = list(self._pending)
+            self._pending.clear()
+        if batch:
+            self._flush_batch(batch)
+
+    def _flush_batch(self, batch: list) -> None:
+        # claim every future before dispatch: a client cancel() between
+        # admission and flush drops the request here; once claimed,
+        # set_result can no longer race a cancel and kill the worker
+        batch = [e for e in batch if e[4].set_running_or_notify_cancel()]
+        if not batch:
+            return
+        try:
+            # the whole dispatch is guarded: the single worker thread must
+            # survive ANY failure (bad pattern, a foreign flush of the
+            # shared server stealing tickets, ...) — an admitted future
+            # must resolve, if only to an exception
+            tickets = [
+                self.server.submit(pat, kind, k=k)
+                for (_, pat, kind, k, _) in batch
+            ]
+            results = self.server.flush()
+            outs = [results[t] for t in tickets]
+        except Exception as e:  # noqa: BLE001 — the worker must survive
+            for (_, _, _, _, fut) in batch:
+                if not fut.done():
+                    fut.set_exception(e)
+            return
+        t_done = time.perf_counter()
+        with self._lock:
+            self.flushes += 1
+            self.completed += len(batch)
+            for (t0, pat, kind, _, _) in batch:
+                self._bucket(kind, len(pat)).record((t_done - t0) * 1e3)
+        for out, (_, _, _, _, fut) in zip(outs, batch):
+            fut.set_result(out)
+
+    def _bucket(self, kind: str, m: int) -> _BucketStats:
+        key = f"{kind}/{self.server._bucket_len(m)}"
+        if key not in self._buckets:
+            self._buckets[key] = _BucketStats(
+                self.slo_p99_ms.get(kind), self.window
+            )
+        return self._buckets[key]
+
+    # -- observability -------------------------------------------------------
+
+    def metrics(self) -> dict:
+        """Serving metrics snapshot (JSON-able).
+
+        ``buckets`` maps "kind/padded-length" (one per jit program the
+        server compiled) to {completed, p50_ms, p99_ms, slo_p99_ms, slo_ok,
+        violations} over the last ``window`` completions; top level carries
+        admitted/rejected/completed counters, the shed fraction, sustained
+        qps since start, and the live queue depth."""
+        with self._lock:
+            offered = self.admitted + self.rejected
+            elapsed = time.perf_counter() - self._t_start
+            return {
+                "admitted": self.admitted,
+                "rejected": self.rejected,
+                "completed": self.completed,
+                "flushes": self.flushes,
+                "shed_frac": self.rejected / offered if offered else 0.0,
+                "qps": self.completed / elapsed if elapsed > 0 else 0.0,
+                "queue_depth": len(self._pending),
+                "max_queue": self.max_queue,
+                "buckets": {
+                    key: b.summary()
+                    for key, b in sorted(self._buckets.items())
+                },
+            }

@@ -1,0 +1,287 @@
+"""Async serving frontend + FMQueryServer edge cases: empty flush,
+oversize queries, admission-control shedding, drain-on-stop, per-bucket
+metrics — and the stacked segment-parallel fan-out's bit-identity with the
+sequential path (including across a compact() boundary)."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.fm_index import PAD, count_naive
+from repro.core.pipeline import build_index
+from repro.core.segments import SegmentedIndex
+from repro.serving.engine import FMQueryServer
+from repro.serving.frontend import AsyncQueryFrontend, Rejected
+
+SIGMA = 5  # dna-like: tokens 1..4
+
+
+@pytest.fixture(scope="module")
+def built():
+    rng = np.random.default_rng(7)
+    toks = rng.integers(1, SIGMA, 2000).astype(np.int32)
+    index = build_index(toks, sample_rate=16, sa_sample_rate=8)
+    return rng, toks, index
+
+
+def _server(index, **kw):
+    kw.setdefault("length_buckets", (4, 8))
+    kw.setdefault("max_batch", 16)
+    kw.setdefault("locate_k", 4)
+    return FMQueryServer(index, **kw)
+
+
+class TestServerEdges:
+    def test_empty_flush(self, built):
+        _, _, index = built
+        server = _server(index)
+        assert server.flush() == {}
+        assert server.stats.queries == 0 and server.stats.batches == 0
+
+    def test_query_longer_than_any_bucket(self, built):
+        """Oversize patterns escalate to the next pow2 bucket instead of
+        truncating — the answer must equal the naive oracle."""
+        _, toks, index = built
+        server = _server(index)
+        pat = toks[100:125]  # length 25 > largest bucket 8 -> bucket 32
+        assert server._bucket_len(len(pat)) == 32
+        got = server.count([pat])
+        assert got[0] == count_naive(toks, pat)
+
+    def test_flush_clears_queue_and_records_completed(self, built):
+        _, toks, index = built
+        server = _server(index)
+        t = server.submit(toks[10:14])
+        res = server.flush()
+        assert server.flush() == {}  # queue drained by the first flush
+        assert server.completed[t].count == res[t].count
+
+
+class TestFrontend:
+    def test_mixed_results_match_direct(self, built):
+        rng, toks, index = built
+        server = _server(index)
+        pats, kinds = [], []
+        for _ in range(40):
+            L = int(rng.integers(2, 9))
+            st = int(rng.integers(0, len(toks) - L))
+            pats.append(toks[st : st + L])
+            kinds.append("locate" if rng.random() < 0.5 else "count")
+        with AsyncQueryFrontend(server, max_queue=256,
+                                max_wait_ms=1.0) as fe:
+            futs = [fe.submit(p, kd, k=4 if kd == "locate" else None)
+                    for p, kd in zip(pats, kinds)]
+            results = [f.result(timeout=120) for f in futs]
+        L = max(len(p) for p in pats)
+        padded = np.full((len(pats), L), PAD, np.int32)
+        for i, p in enumerate(pats):
+            padded[i, : len(p)] = p
+        counts = np.asarray(index.count(padded))
+        pos, _ = index.locate(padded, 4)
+        pos = np.asarray(pos)
+        for i, (res, kind) in enumerate(zip(results, kinds)):
+            assert not isinstance(res, Rejected)
+            assert res.kind == kind
+            if kind == "count":
+                assert res.count == counts[i]
+            else:
+                assert res.count == min(counts[i], 4)
+                assert np.array_equal(
+                    np.asarray(res.positions), pos[i][: res.count]
+                )
+
+    def test_queue_full_rejection(self, built):
+        """Submits beyond max_queue shed immediately with a Rejected
+        result; admitted requests still resolve once the worker runs."""
+        _, toks, index = built
+        fe = AsyncQueryFrontend(_server(index), max_queue=3,
+                                autostart=False)
+        admitted = [fe.submit(toks[:4]) for _ in range(3)]
+        shed = fe.submit(toks[:4])
+        assert isinstance(shed.result(timeout=1), Rejected)
+        assert shed.result().reason == "queue_full"
+        assert fe.rejected == 1 and fe.admitted == 3
+        fe.stop()  # drains inline (worker never started)
+        assert all(f.result(timeout=1).count >= 0 for f in admitted)
+        m = fe.metrics()
+        assert m["shed_frac"] == pytest.approx(0.25)
+        assert m["completed"] == 3
+
+    def test_burst_sheds_without_crashing(self, built):
+        """Open-loop burst far above capacity: some requests shed, every
+        admitted one answers correctly, nothing deadlocks."""
+        rng, toks, index = built
+        expect = {}
+        with AsyncQueryFrontend(_server(index), max_queue=8,
+                                max_wait_ms=0.5) as fe:
+            futs = []
+            for i in range(200):
+                L = int(rng.integers(2, 9))
+                st = int(rng.integers(0, len(toks) - L))
+                expect[i] = count_naive(toks, toks[st : st + L])
+                futs.append(fe.submit(toks[st : st + L]))
+            results = [f.result(timeout=120) for f in futs]
+        shed = sum(isinstance(r, Rejected) for r in results)
+        assert shed > 0, "burst into a depth-8 queue should shed"
+        for i, r in enumerate(results):
+            if not isinstance(r, Rejected):
+                assert r.count == expect[i]
+        m = fe.metrics()
+        assert m["rejected"] == shed
+        assert m["admitted"] == 200 - shed == m["completed"]
+
+    def test_metrics_buckets_have_percentiles(self, built):
+        _, toks, index = built
+        slo = {"count": 1e9, "locate": 1e9}
+        with AsyncQueryFrontend(_server(index), max_queue=64,
+                                slo_p99_ms=slo) as fe:
+            futs = [fe.submit(toks[i : i + 3]) for i in range(10)]
+            futs += [fe.submit(toks[i : i + 6], "locate") for i in range(5)]
+            for f in futs:
+                f.result(timeout=120)
+            m = fe.metrics()
+        assert set(m["buckets"]) == {"count/4", "locate/8"}
+        b = m["buckets"]["count/4"]
+        assert b["completed"] == 10
+        assert 0 < b["p50_ms"] <= b["p99_ms"]
+        assert b["slo_ok"] is True and b["violations"] == 0
+
+    def test_slo_violations_counted(self, built):
+        _, toks, index = built
+        with AsyncQueryFrontend(_server(index), max_queue=64,
+                                slo_p99_ms={"count": 1e-6}) as fe:
+            fe.submit(toks[:4]).result(timeout=120)
+            m = fe.metrics()
+        b = m["buckets"]["count/4"]
+        assert b["violations"] == 1 and b["slo_ok"] is False
+
+    def test_worker_survives_dispatch_failure(self, built):
+        """A request the server cannot answer resolves its future to the
+        exception — the worker stays alive and keeps serving."""
+        _, toks, index = built
+        with AsyncQueryFrontend(_server(index), max_queue=16) as fe:
+            bad = fe.submit(toks[:4], "locate", k=-1)  # invalid locate k
+            with pytest.raises(Exception):
+                bad.result(timeout=120)
+            ok = fe.submit(toks[10:14])  # worker must still be alive
+            assert ok.result(timeout=120).count >= 0
+
+    def test_cancelled_future_does_not_wedge_worker(self, built):
+        """A client cancelling a queued request must not kill the flush
+        worker: later requests still resolve."""
+        _, toks, index = built
+        fe = AsyncQueryFrontend(_server(index), max_queue=16,
+                                autostart=False)
+        doomed = fe.submit(toks[:4])
+        survivor = fe.submit(toks[10:14])
+        assert doomed.cancel()  # still queued: cancellable
+        fe.start()
+        assert survivor.result(timeout=120).count >= 0
+        with fe:  # frontend still alive and serving
+            assert fe.submit(toks[:4]).result(timeout=120).count >= 0
+        assert doomed.cancelled()
+
+    def test_submit_after_stop_raises(self, built):
+        _, toks, index = built
+        fe = AsyncQueryFrontend(_server(index), max_queue=4)
+        fe.stop()
+        with pytest.raises(RuntimeError):
+            fe.submit(toks[:4])
+
+    def test_coalescing_batches_concurrent_producers(self, built):
+        """Many producer threads, one flush worker: far fewer flushes than
+        requests (max-wait coalescing), every result correct."""
+        _, toks, index = built
+        with AsyncQueryFrontend(_server(index), max_queue=1024,
+                                max_wait_ms=20.0) as fe:
+            futs, lock = [], threading.Lock()
+
+            def produce():
+                for _ in range(25):
+                    f = fe.submit(toks[20:24])
+                    with lock:
+                        futs.append(f)
+                    time.sleep(0.001)
+
+            threads = [threading.Thread(target=produce) for _ in range(4)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            want = count_naive(toks, toks[20:24])
+            assert all(f.result(timeout=120).count == want for f in futs)
+            m = fe.metrics()
+        assert m["flushes"] < m["completed"]
+
+
+class TestSegmentParallelParity:
+    """The stacked fan-out must be bit-identical to the sequential loop —
+    including across a compact() boundary (stacked layout rebuilt) and when
+    served through the query server."""
+
+    @pytest.fixture(scope="class")
+    def seg_built(self):
+        rng = np.random.default_rng(11)
+        chunks = [rng.integers(1, SIGMA, n).astype(np.int32)
+                  for n in (350, 120, 60, 500, 90)]
+        seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8)
+        for c in chunks:
+            seg.append(c)
+        full = np.concatenate(chunks)
+        pats = np.full((20, 6), PAD, np.int32)
+        for b in range(20):
+            L = int(rng.integers(1, 7))
+            st = int(rng.integers(0, len(full) - L))
+            pats[b, :L] = full[st : st + L]
+        return seg, pats
+
+    def _both(self, seg, fn):
+        seg.parallel, seg._stacked_cache = True, None
+        par = fn()
+        assert seg._stacked_cache not in (None, False), "stacked path unused"
+        seg.parallel, seg._stacked_cache = False, None
+        sequ = fn()
+        seg.parallel = None
+        return par, sequ
+
+    def test_count_parity(self, seg_built):
+        seg, pats = seg_built
+        par, sequ = self._both(seg, lambda: seg.count(pats))
+        assert np.array_equal(par, sequ)
+
+    def test_locate_parity(self, seg_built):
+        seg, pats = seg_built
+        (pp, pc), (sp, sc) = self._both(seg, lambda: seg.locate(pats, 4))
+        assert np.array_equal(pp, sp) and np.array_equal(pc, sc)
+
+    def test_parity_across_compact_boundary(self, seg_built):
+        """compact() merges runs of small segments — the rebuilt stacked
+        layout must still match the sequential answers exactly."""
+        seg, pats = seg_built
+        before = seg.count(pats)
+        assert seg.compact(min_tokens=200) >= 1
+        par, sequ = self._both(seg, lambda: seg.count(pats))
+        assert np.array_equal(par, sequ)
+        # compaction can only reveal former cross-boundary matches
+        assert (par >= before).all()
+        (pp, pc), (sp, sc) = self._both(seg, lambda: seg.locate(pats, 4))
+        assert np.array_equal(pp, sp) and np.array_equal(pc, sc)
+
+    def test_served_identically_through_frontend(self, seg_built):
+        seg, pats = seg_built
+        seg.parallel = True
+        server = _server(seg)
+        with AsyncQueryFrontend(server, max_queue=64) as fe:
+            futs = [fe.submit(pats[b][pats[b] != PAD]) for b in range(20)]
+            got = np.array([f.result(timeout=120).count for f in futs])
+        seg.parallel = None
+        assert np.array_equal(got, seg.count(pats))
+
+    def test_single_segment_auto_stays_sequential(self):
+        seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8)
+        seg.append(np.ones(50, np.int32))
+        assert seg._stacked() is None  # auto: no stacking for one segment
+        seg.parallel = True
+        assert seg._stacked() is not None  # forced: stack of one works
