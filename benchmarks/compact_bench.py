@@ -1,0 +1,156 @@
+"""Compaction benchmark: rebuild-free BWT merge vs raw-token rebuild.
+
+``SegmentedIndex.compact(strategy="merge")`` splices per-segment BWTs via
+the ``core.bwt_merge`` interleave walk (no suffix sorting);
+``strategy="rebuild"`` re-sorts the run's raw tokens — the correctness
+oracle.  Each row of ``experiments/BENCH_compact.json`` times both
+strategies over the same catalog and asserts the two produce a
+bit-identical merged index (``outputs_match``) and identical query answers
+(``answers_match``).
+
+``--smoke`` runs the 64 Ki two-segment scale (the CI regression gate row);
+full runs add more scales and a multi-segment catalog.  Timings exclude
+compile: each strategy is warmed on a same-shape throwaway catalog first,
+so the steady-state serving cost (the jit programs are cached per
+power-of-two bucket) is what is measured.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import alphabet as al
+from repro.core.fm_index import PAD, fm_mismatch
+from repro.core.segments import SegmentedIndex
+from repro.data.corpus import corpus
+
+DEFAULT_JSON = os.path.join(
+    os.path.dirname(__file__), "..", "experiments", "BENCH_compact.json"
+)
+
+SAMPLE_RATE = 32
+SA_SAMPLE_RATE = 16
+
+
+def build_catalog(kind: str, n: int, n_segments: int) -> SegmentedIndex:
+    toks = corpus(kind, n)
+    sigma = al.sigma_of(al.append_sentinel(toks))
+    seg = SegmentedIndex(sigma, sample_rate=SAMPLE_RATE,
+                         sa_sample_rate=SA_SAMPLE_RATE)
+    bounds = np.linspace(0, len(toks), n_segments + 1).astype(int)
+    for lo, hi in zip(bounds[:-1], bounds[1:]):
+        seg.append(toks[lo:hi])
+    return seg
+
+
+def snapshot(seg: SegmentedIndex):
+    return list(seg.segments), seg._next_id
+
+
+def restore(seg: SegmentedIndex, snap) -> None:
+    seg.segments, seg._next_id = list(snap[0]), snap[1]
+    seg._stacked_cache = None
+
+
+def time_strategy(seg: SegmentedIndex, snap, strategy: str, repeats: int):
+    best, merged = float("inf"), None
+    for _ in range(repeats):
+        restore(seg, snap)
+        t0 = time.perf_counter()
+        m = seg.compact(strategy=strategy)
+        jax.block_until_ready(seg.segments[0].index.fm.bwt)
+        best = min(best, time.perf_counter() - t0)
+        assert m >= 1, strategy
+        merged = seg.segments[0].index.fm
+    return best, merged
+
+
+def bench_scale(kind: str, n: int, n_segments: int, repeats: int,
+                rng) -> dict:
+    seg = build_catalog(kind, n, n_segments)
+    snap = snapshot(seg)
+
+    # warm the jit programs (snapshot-restore resets the catalog, so the
+    # warmup compaction hits the same pow2 bucket shapes the timed runs do)
+    for strategy in ("merge", "rebuild"):
+        restore(seg, snap)
+        seg.compact(strategy=strategy)
+
+    rebuild_s, fm_rebuild = time_strategy(seg, snap, "rebuild", repeats)
+    merge_s, fm_merge = time_strategy(seg, snap, "merge", repeats)
+    outputs_match = not fm_mismatch(fm_merge, fm_rebuild)
+
+    # answers must also be invariant across the compaction itself
+    restore(seg, snap)
+    B, L = 16, 8
+    toks = np.concatenate([s.tokens for s in seg.segments])
+    pats = np.full((B, L), PAD, np.int32)
+    for b in range(B):
+        m = int(rng.integers(2, L + 1))
+        st = int(rng.integers(0, len(toks) - m))
+        pats[b, :m] = toks[st : st + m]
+    before = seg.count(pats)
+    seg.compact(strategy="merge")
+    answers_match = bool(np.array_equal(seg.count(pats), before))
+
+    row = {
+        "scenario": f"{kind}.{n}.{n_segments}seg",
+        "n": int(n),
+        "segments": int(n_segments),
+        "merge_s": merge_s,
+        "rebuild_s": rebuild_s,
+        "speedup": rebuild_s / merge_s,
+        "outputs_match": bool(outputs_match),
+        "answers_match": answers_match,
+    }
+    print(
+        f"{row['scenario']}: merge {merge_s * 1e3:.1f}ms vs rebuild "
+        f"{rebuild_s * 1e3:.1f}ms -> {row['speedup']:.2f}x "
+        f"(bit-identical: {outputs_match})"
+    )
+    return row
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="64 Ki two-segment row only (the CI gate)")
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--json", default=DEFAULT_JSON,
+                    help="output path ('' disables)")
+    args = ap.parse_args(argv)
+
+    rng = np.random.default_rng(0)
+    scales = [("dna", 1 << 16, 2)]
+    if not args.smoke:
+        scales += [("dna", 1 << 16, 4), ("english", 1 << 16, 2),
+                   ("dna", 1 << 17, 2)]
+    rows = [bench_scale(kind, n, k, args.repeats, rng)
+            for kind, n, k in scales]
+
+    bad = [r["scenario"] for r in rows
+           if not (r["outputs_match"] and r["answers_match"])]
+    if bad:
+        raise SystemExit(f"compact_bench: CORRECTNESS FAILURE in {bad}")
+
+    if args.json:
+        payload = {
+            "bench": "compact",
+            "backend": jax.default_backend(),
+            "rows": rows,
+        }
+        path = os.path.abspath(args.json)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

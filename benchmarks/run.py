@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV rows (plus per-bench headers).
   fmbench    FM-index serving throughput + rank_select kernel
   servebench async frontend load test (closed/open/overload); writes
              BENCH_serve.json
+  compactbench  BWT-merge vs rebuild compaction (bit-identity asserted);
+             writes BENCH_compact.json
   roofline   index-build + LM roofline terms (from dry-run JSONs, if present)
 """
 
@@ -61,13 +63,20 @@ def _build_json_section():
 
 
 def main() -> None:
-    from . import fm_query_bench, serve_bench, sort_bench, table2_bwt
+    from . import (
+        compact_bench,
+        fm_query_bench,
+        serve_bench,
+        sort_bench,
+        table2_bwt,
+    )
 
     table2_bwt.main([])
     _build_json_section()
     sort_bench.main()
     fm_query_bench.main([])
     serve_bench.main([])
+    compact_bench.main([])
     _roofline_section()
 
 

@@ -55,6 +55,15 @@ class BWTIndexConfig:
     ckpt_dir: str | None = None   # None = index dies with the process
     ckpt_keep: int = 3            # retained checkpoint steps
     segment_min_tokens: int = 1 << 22  # compact() threshold for small segments
+    # background compaction policy (SegmentedIndex.maybe_compact, run by the
+    # serving path between flushes): "merge" = rebuild-free BWT merge
+    # (core/bwt_merge; rebuild remains the fallback for ineligible runs),
+    # "rebuild" = always re-sort from raw tokens.  The trigger fires when
+    # >= trigger_ratio of the catalog consists of small segments (and at
+    # least two exist) — fragments amortize into one merge instead of a
+    # compaction per append.
+    compact_strategy: str = "merge"
+    compact_trigger_ratio: float = 0.5
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)

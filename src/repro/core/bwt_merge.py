@@ -1,0 +1,262 @@
+"""Rebuild-free BWT merge of two adjacent index segments (Sirén-style).
+
+``SegmentedIndex.compact`` used to throw away per-segment BWTs and rebuild
+the merged segment from raw tokens — O(total tokens) of suffix sorting per
+compaction.  This module merges two built FM-indexes directly, the way
+Sirén's *BWT for terabases* (arXiv:1511.00898) grows terabase BWTs: the
+merged suffix order is an **interleave** of the two segments' suffix
+orders, and the interleave bitvector is computed by LF-stepping the right
+segment's symbols through the left segment's FM-index — one fused
+``kernels/ops`` rank call per step (Pallas popcount kernel on TPU, jnp
+fallback elsewhere), never touching raw tokens or running a sort.
+
+Let ``TA``/``TB`` be the two segments' *prepared* texts (each a
+concatenation of sentinel-terminated, pad-filled documents — see
+``pipeline.prepare_tokens``) and ``U = TA · TB`` the merged text.  Because
+every document carries its own sentinel and pad run:
+
+* suffixes of ``U`` starting inside ``TB`` are literally the standalone
+  suffixes of ``TB`` (it sits at the end), and
+* suffixes starting inside ``TA`` keep their standalone relative order —
+  **provided TA is a single prepared document**: comparisons between two
+  TA suffixes then always resolve at TA's unique sentinel or inside its
+  trailing pad run, before the continuation into ``TB`` can matter.  (A
+  multi-document TA can contain one suffix that is a proper prefix of
+  another — e.g. two identical documents — whose order legitimately
+  depends on what follows, so a multi-document segment may only ever be
+  the RIGHT operand.  ``segments.compact`` plans its fold accordingly.)
+
+So ``SA(U)`` interleaves ``SA(TA)`` and ``SA(TB)``, and ``BWT(U)`` is the
+corresponding interleave of the two BWTs with exactly two cells exchanged
+(the wrap-around characters at each side's row of suffix 0).  The
+interleave is produced by one backward walk over ``TB``, tracked entirely
+inside the two indexes:
+
+    I(j) = #{TA suffixes (continued into TB) < TB[j:]}
+         = C_A[c] + Occ_A(c, I(j+1))
+           + [c = lastA] * ([rowB < r(j+1)] - [rowA < I(j+1)])
+    r(j) = C_B[c] + Occ_B(c, r(j+1)) + [c = lastB] * [r(j+1) <= rowB]
+
+with ``c = BWT_B[r(j+1)] = TB[j]``, ``lastX = BWT_X[rowX]`` the last
+character of each text and ``r(j) = ISA_B[j]``.  The first correction
+accounts for TA's final suffix continuing into ``TB`` instead of ending;
+the second repairs the cyclic wrap entry that ``bwt_from_sa`` stores at
+``rowB`` (exact for any multi-document right operand).  The walk anchors
+at ``I(nB-1) = C_A[lastB]``, ``r(nB-1) = C_B[lastB]`` — the shortest
+suffix of ``TB`` sorts before every longer suffix sharing its first
+character.
+
+The merged SA sample is spliced from the per-segment samples: left rows
+keep their values, right rows shift by ``len(TA)`` (requiring the stride
+to divide ``len(TA)`` — checked by ``merge_eligible``), and the merged
+stream re-packs at the merged bit width through the same
+``fm_index.sample_arrays_from_rows`` constructor the rebuild path uses.
+The result is bit-identical to rebuilding over ``U`` from raw tokens
+(asserted per-trajectory by ``tests/test_lifecycle_fuzz.py``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..kernels import ops
+from .fm_index import (
+    FMIndex,
+    _next_pow2,
+    build_fm_index,
+    decode_sa_values,
+    packed_symbol,
+    sample_arrays_from_rows,
+    sample_marked_rows,
+)
+
+
+def merge_eligible(left: FMIndex, right: FMIndex) -> str | None:
+    """Why the pair cannot BWT-merge, or None when it can.
+
+    The left operand must additionally be a *single prepared document*
+    (callers know the document structure; this function checks only what
+    the indexes expose).  The rebuild path remains the fallback (and the
+    bit-identity oracle) for every ineligible pair.
+    """
+    for side, fm in (("left", left), ("right", right)):
+        if not isinstance(fm, FMIndex):
+            return f"{side} segment is not a single-device FMIndex"
+    sig_l = (left.sigma, left.sample_rate, left.bits, left.sa_sample_rate)
+    sig_r = (right.sigma, right.sample_rate, right.bits, right.sa_sample_rate)
+    if sig_l != sig_r:
+        return f"mixed layouts {sig_l} != {sig_r}"
+    for side, fm in (("left", left), ("right", right)):
+        if fm.length % fm.sample_rate:
+            return f"{side} length {fm.length} not a block multiple"
+    if left.sa_sample_rate:
+        if left.sa_marks is None or right.sa_marks is None:
+            return "missing SA sample arrays"
+        if left.length % left.sa_sample_rate:
+            return (
+                f"SA stride {left.sa_sample_rate} does not divide left "
+                f"length {left.length}"
+            )
+    return None
+
+
+def _bucket_rows(arr, rows: int, fill):
+    """Pad a row-major array to ``rows`` rows so the walk's jit program is
+    reused across merges within the same power-of-two bucket."""
+    if arr.shape[0] == rows:
+        return arr
+    pad = jnp.broadcast_to(
+        fill, (rows - arr.shape[0],) + arr.shape[1:]
+    ).astype(arr.dtype)
+    return jnp.concatenate([arr, pad])
+
+
+def _side_arrays(fm: FMIndex, nb_bucket: int):
+    """(fused, blocks, occ) of one side, padded to the block bucket.  Pad
+    rows are never addressed (block ids clamp to the true count)."""
+    if fm.bits:
+        return _bucket_rows(fm.fused, nb_bucket, 0), None, None
+    r = fm.sample_rate
+    blocks = _bucket_rows(fm.bwt.reshape(fm.n_blocks, r), nb_bucket, 0)
+    occ = _bucket_rows(fm.occ_samples[:-1], nb_bucket, 0)
+    return None, blocks, occ
+
+
+def _occ_side(fused, blocks, occ, nb_real, c, p, *, r: int, bits: int,
+              sigma: int):
+    """Occ(c_i, p_i) on one side — the fused kernels/ops rank dispatch
+    (p == nb_real * r folds into the last block, as in ``occ_batch``)."""
+    blk = jnp.minimum(p // r, nb_real - 1)
+    cut = p - blk * r
+    if bits:
+        return ops.rank_packed(fused, blk, c, cut, bits=bits, sigma=sigma)
+    return occ[blk, c] + ops.rank_unpacked(blocks, blk, c, cut)
+
+
+@functools.partial(jax.jit, static_argnames=("sigma", "bits", "r"))
+def _merge_walk(fusedA, blocksA, occA, cA, nbA, rowA, lastA,
+                fusedB, blocksB, occB, cB, nbB, rowB, lastB, nB,
+                *, sigma: int, bits: int, r: int):
+    """Interleave counts ``ins[row]`` = #{left suffixes < right suffix of
+    that row}, for every row of the right index.
+
+    Array shapes are bucket-padded and the true sizes (``nbA``/``nbB``
+    block counts, ``nB`` text length) are traced scalars, so steady-state
+    compaction re-hits one compiled program per bucket shape.  The right
+    side's symbol and LF maps are precomputed in two batched dispatches;
+    the walk proper then issues ONE fused rank call (on the left index)
+    per step.
+    """
+    n_bucket = blocksB.shape[0] * r if bits == 0 else fusedB.shape[0] * r
+    rows = jnp.arange(n_bucket, dtype=jnp.int32)
+    # right side, batched: symbol of every row, then the (wrap-corrected)
+    # LF map.  Pad rows decode garbage that the walk never visits.
+    if bits:
+        c_all = packed_symbol(fusedB, rows // r, rows % r,
+                              sigma=sigma, bits=bits)
+    else:
+        c_all = blocksB[rows // r, rows % r]
+    c_all = jnp.clip(c_all, 0, sigma - 1)
+    lf_all = (
+        cB[c_all]
+        + _occ_side(fusedB, blocksB, occB, nbB, c_all, rows,
+                    r=r, bits=bits, sigma=sigma)
+        + ((c_all == lastB) & (rows <= rowB)).astype(jnp.int32)
+    )
+
+    ins0 = jnp.zeros(n_bucket, jnp.int32)
+    # anchor: the length-1 suffix TB[nB-1:] sorts before every longer
+    # suffix sharing its first character lastB
+    I0, r0 = cA[lastB], cB[lastB]
+    ins0 = ins0.at[r0].set(I0)
+
+    def body(_, state):
+        I, rr, ins = state
+        c = c_all[rr]
+        corr = jnp.where(
+            c == lastA,
+            (rowB < rr).astype(jnp.int32) - (rowA < I).astype(jnp.int32),
+            0,
+        )
+        occ = _occ_side(fusedA, blocksA, occA, nbA, c[None], I[None],
+                        r=r, bits=bits, sigma=sigma)[0]
+        I_new = cA[c] + occ + corr
+        r_new = lf_all[rr]
+        return I_new, r_new, ins.at[r_new].set(I_new)
+
+    _, _, ins = lax.fori_loop(0, nB - 1, body, (I0, r0, ins0))
+    return ins
+
+
+def merge_fm_indexes(
+    left: FMIndex, right: FMIndex, *, compress_sa: bool | None = None,
+    pack: bool | None = None,
+) -> FMIndex:
+    """BWT of ``T_left · T_right`` from the two built indexes — no sort.
+
+    PRECONDITION (not checkable from the indexes alone): ``left`` indexes a
+    single prepared document; ``right`` may be any document concatenation.
+    ``merge_eligible`` must have returned None.  ``compress_sa``/``pack``
+    as in ``build_fm_index`` — pass the same knobs the rebuild path would
+    use so both construct the identical layout.
+    """
+    reason = merge_eligible(left, right)
+    if reason:
+        raise ValueError(f"cannot merge: {reason}")
+    nA, nB = left.length, right.length
+    r, sigma, bits = left.sample_rate, left.sigma, left.bits
+    nbA_b = _next_pow2(left.n_blocks)
+    nbB_b = _next_pow2(right.n_blocks)
+    fA, bA, oA = _side_arrays(left, nbA_b)
+    fB, bB, oB = _side_arrays(right, nbB_b)
+    ins = np.asarray(_merge_walk(
+        fA, bA, oA, left.c_array, jnp.asarray(left.n_blocks, jnp.int32),
+        left.row, left.bwt[left.row],
+        fB, bB, oB, right.c_array, jnp.asarray(right.n_blocks, jnp.int32),
+        right.row, right.bwt[right.row], jnp.asarray(nB, jnp.int32),
+        sigma=sigma, bits=bits, r=r,
+    ))[:nB].astype(np.int64)
+
+    # splice: right rows land at ins[k] + k, left rows fill the gaps in
+    # order; then exchange the two wrap cells (each side's row of suffix 0
+    # must hold the OTHER side's last character in the merged text)
+    rowA, rowB = int(left.row), int(right.row)
+    bwtA = np.asarray(left.bwt)[:nA]
+    bwtB = np.asarray(right.bwt)[:nB]
+    pos_b = ins + np.arange(nB)
+    is_b = np.zeros(nA + nB, bool)
+    is_b[pos_b] = True
+    pos_a = np.nonzero(~is_b)[0]
+    merged = np.empty(nA + nB, np.int32)
+    merged[pos_a] = bwtA
+    merged[pos_b] = bwtB
+    merged[pos_a[rowA]] = bwtB[rowB]
+    merged[pos_b[rowB]] = bwtA[rowA]
+
+    sa_samples = None
+    srate = left.sa_sample_rate
+    if srate:
+        rows_m = np.concatenate([
+            pos_a[sample_marked_rows(left)],
+            pos_b[sample_marked_rows(right)],
+        ])
+        vals_m = np.concatenate([
+            decode_sa_values(left),
+            decode_sa_values(right) + nA,
+        ]).astype(np.int32)
+        order = np.argsort(rows_m, kind="stable")
+        sa_samples = sample_arrays_from_rows(
+            rows_m[order], vals_m[order], nA + nB, srate,
+            compress=compress_sa,
+        )
+
+    return build_fm_index(
+        jnp.asarray(merged), jnp.asarray(pos_a[rowA], jnp.int32), sigma, r,
+        pack=bool(bits) if pack is None else pack,
+        sa_samples=sa_samples, sa_sample_rate=srate,
+    )

@@ -131,22 +131,20 @@ def unpack_sa_value(words: jax.Array, idx: jax.Array, bits: int) -> jax.Array:
     return ((lo | hi) & mask).astype(jnp.int32)
 
 
-def build_sa_samples(sa, sa_sample_rate: int, *, compress: bool | None = None):
-    """(marks, mark_ranks, vals, val_bits) for locate(): host-side, exact.
+def sample_arrays_from_rows(rows, vals, n: int, sa_sample_rate: int, *,
+                            compress: bool | None = None):
+    """(marks, mark_ranks, vals, val_bits) from an explicit marked-row set.
 
-    Rows i with SA[i] % s == 0 are marked; their SA values are stored in row
-    order.  Value lookup for marked row i is vals[mark_ranks[i//32] +
-    popcount(marks[i//32] & low_bits(i%32))] — O(1), fully vectorisable.
-
-    ``compress`` bit-packs the stored values: every sampled value is a
-    multiple of s, so ``val // s`` fits ``ceil(log2(n/s))`` bits.  None
-    (default) packs whenever that width beats raw int32; the returned
-    ``val_bits`` (0 = raw) selects the decode in ``sample_lookup``.
+    ``rows``: sorted row indices whose SA value is a multiple of the
+    stride; ``vals``: those values in the same (row) order; ``n``: index
+    length.  The single constructor of the on-index SA-sample arrays,
+    shared by ``build_sa_samples`` (rows derived from a full SA) and the
+    BWT-merge path (rows spliced from two merged indexes) — so both
+    produce bit-identical arrays, including the ``compress`` decision,
+    for the same marked set.
     """
-    sa_np = np.asarray(sa)
-    n = sa_np.shape[0]
-    marked = (sa_np % sa_sample_rate) == 0
-    idx = np.nonzero(marked)[0]
+    idx = np.asarray(rows, np.int64)
+    vals = np.asarray(vals, np.int32)
     nwords = -(-n // 32)
     words = np.zeros(nwords, np.uint32)
     np.bitwise_or.at(
@@ -154,7 +152,6 @@ def build_sa_samples(sa, sa_sample_rate: int, *, compress: bool | None = None):
     )
     pc = np.unpackbits(words.view(np.uint8)).reshape(nwords, 32).sum(axis=1)
     ranks = (np.cumsum(pc) - pc).astype(np.int32)
-    vals = sa_np[marked].astype(np.int32)  # SA holds 0, so never empty
     q = vals // sa_sample_rate             # exact: marked vals are multiples
     val_bits = max(1, int(q.max()).bit_length()) if q.size else 0
     if compress is None:
@@ -169,6 +166,72 @@ def build_sa_samples(sa, sa_sample_rate: int, *, compress: bool | None = None):
         jnp.asarray(pack_sa_values(q, val_bits) if compress else vals),
         val_bits,
     )
+
+
+def build_sa_samples(sa, sa_sample_rate: int, *, compress: bool | None = None):
+    """(marks, mark_ranks, vals, val_bits) for locate(): host-side, exact.
+
+    Rows i with SA[i] % s == 0 are marked; their SA values are stored in row
+    order.  Value lookup for marked row i is vals[mark_ranks[i//32] +
+    popcount(marks[i//32] & low_bits(i%32))] — O(1), fully vectorisable.
+
+    ``compress`` bit-packs the stored values: every sampled value is a
+    multiple of s, so ``val // s`` fits ``ceil(log2(n/s))`` bits.  None
+    (default) packs whenever that width beats raw int32; the returned
+    ``val_bits`` (0 = raw) selects the decode in ``sample_lookup``.
+    """
+    sa_np = np.asarray(sa)
+    marked = (sa_np % sa_sample_rate) == 0
+    # SA holds 0, so the marked set is never empty
+    return sample_arrays_from_rows(
+        np.nonzero(marked)[0], sa_np[marked].astype(np.int32),
+        sa_np.shape[0], sa_sample_rate, compress=compress,
+    )
+
+
+def decode_sa_values(fm) -> np.ndarray:
+    """Raw int32 SA-sample values of an index in row order (host-side),
+    undoing the optional bit-packing.  The sampled values are exactly
+    {0, s, 2s, ...} below the text length, so the count is implied."""
+    nvals = -(-fm.length // fm.sa_sample_rate)
+    if fm.sa_val_bits:
+        return np.asarray(unpack_sa_value(
+            fm.sa_vals, jnp.arange(nvals, dtype=jnp.int32), fm.sa_val_bits,
+        )) * fm.sa_sample_rate
+    return np.asarray(fm.sa_vals)[:nvals]
+
+
+def sample_marked_rows(fm) -> np.ndarray:
+    """Sorted row indices carrying an SA sample (host-side): the set bits
+    of the ``sa_marks`` bitvector below the text length."""
+    words = np.asarray(fm.sa_marks).view(np.uint32)
+    bits = np.unpackbits(words.view(np.uint8), bitorder="little")
+    return np.nonzero(bits[: fm.length])[0]
+
+
+FM_ARRAY_FIELDS = ("bwt", "row", "c_array", "occ_samples", "fused",
+                   "sa_marks", "sa_mark_ranks", "sa_vals")
+FM_AUX_FIELDS = ("sample_rate", "sigma", "length", "bits",
+                 "sa_sample_rate", "sa_val_bits")
+
+
+def fm_mismatch(a: FMIndex, b: FMIndex) -> list:
+    """Field names on which two FM-indexes differ (empty = bit-identical).
+
+    The single bit-identity oracle behind every merge-vs-rebuild parity
+    assertion (fuzz suite, dist driver, compaction benchmark) — one field
+    list, so a new ``FMIndex`` field cannot silently fall out of parity
+    coverage."""
+    out = [name for name in FM_AUX_FIELDS
+           if getattr(a, name) != getattr(b, name)]
+    for name in FM_ARRAY_FIELDS:
+        x, y = getattr(a, name), getattr(b, name)
+        if (x is None) != (y is None):
+            out.append(name)
+        elif x is not None and not np.array_equal(np.asarray(x),
+                                                  np.asarray(y)):
+            out.append(name)
+    return out
 
 
 def build_fm_index(
@@ -559,14 +622,7 @@ def stack_fm_indexes(
             m = np.asarray(fm.sa_marks)
             marks_np[i, : m.shape[0]] = m
             ranks_np[i, : m.shape[0]] = np.asarray(fm.sa_mark_ranks)
-            nvals = -(-fm.length // srate)  # sampled values are 0, s, 2s, ...
-            if fm.sa_val_bits:
-                raw = np.asarray(unpack_sa_value(
-                    fm.sa_vals, jnp.arange(nvals, dtype=jnp.int32),
-                    fm.sa_val_bits,
-                )) * srate
-            else:
-                raw = np.asarray(fm.sa_vals)[:nvals]
+            raw = decode_sa_values(fm)
             vals_np[i, : raw.shape[0]] = raw
         sa_marks, sa_mark_ranks, sa_vals = (
             jnp.asarray(marks_np.reshape(-1)),
@@ -579,6 +635,151 @@ def stack_fm_indexes(
         jnp.asarray(len_np), sa_marks, sa_mark_ranks, sa_vals,
         jnp.asarray(len(fms), jnp.int32), S, NB, r, sigma, bits, srate,
     )
+
+
+def _stack_check(st: StackedFMIndex, fm: FMIndex) -> None:
+    """Raise unless ``fm`` fits the stacked bucket layout (same static
+    signature, block count within the bucket)."""
+    if not isinstance(fm, FMIndex):
+        raise ValueError(f"cannot stack {type(fm).__name__}")
+    sig = (st.sigma, st.sample_rate, st.bits, st.sa_sample_rate)
+    if (fm.sigma, fm.sample_rate, fm.bits, fm.sa_sample_rate) != sig:
+        raise ValueError(
+            "segment layout does not match the stacked catalog: "
+            f"{(fm.sigma, fm.sample_rate, fm.bits, fm.sa_sample_rate)} "
+            f"!= {sig}"
+        )
+    if fm.n_blocks > st.blocks_pad:
+        raise ValueError(
+            f"segment blocks {fm.n_blocks} exceed bucket {st.blocks_pad}"
+        )
+
+
+def _seg_rows(st: StackedFMIndex, fm: FMIndex):
+    """One segment's per-leaf row payloads, padded to the bucket shapes —
+    the update unit shared by ``stacked_append`` and ``stacked_replace``."""
+    NB, r, sigma = st.blocks_pad, st.sample_rate, st.sigma
+    out = {}
+    if st.bits:
+        rows = jnp.zeros((NB, st.fused.shape[1]), jnp.int32)
+        out["fused"] = rows.at[: fm.n_blocks].set(fm.fused)
+    else:
+        rows = jnp.full((NB, r), PAD, jnp.int32)
+        out["blocks"] = rows.at[: fm.n_blocks].set(
+            fm.bwt.reshape(fm.n_blocks, r)
+        )
+        occ = jnp.zeros((NB, sigma), jnp.int32)
+        out["occ"] = occ.at[: fm.n_blocks].set(fm.occ_samples[:-1])
+    out["c_array"] = fm.c_array
+    out["n_blocks"] = jnp.asarray(fm.n_blocks, jnp.int32)
+    out["lengths"] = jnp.asarray(fm.length, jnp.int32)
+    if st.sa_sample_rate:
+        MW = st.sa_marks.shape[0] // st.seg_pad
+        MV = st.sa_vals.shape[0] // st.seg_pad
+        m = np.asarray(fm.sa_marks)
+        marks = np.zeros(MW, np.int32)
+        ranks = np.zeros(MW, np.int32)
+        vals = np.zeros(MV, np.int32)
+        marks[: m.shape[0]] = m
+        ranks[: m.shape[0]] = np.asarray(fm.sa_mark_ranks)
+        raw = decode_sa_values(fm)
+        vals[: raw.shape[0]] = raw
+        out["sa_marks"] = jnp.asarray(marks)
+        out["sa_mark_ranks"] = jnp.asarray(ranks)
+        out["sa_vals"] = jnp.asarray(vals)
+    return out
+
+
+def stacked_append(st: StackedFMIndex, fm: FMIndex) -> StackedFMIndex:
+    """Append one segment into spare bucket capacity, in place.
+
+    Writes the new segment's rows into slot ``n_seg`` of every leaf and
+    bumps ``n_seg`` — all static shapes and aux data are unchanged, so the
+    query jit programs compiled for the old catalog serve the new one
+    without recompiling (``n_seg`` is a pytree leaf).  Raises ``ValueError``
+    when the bucket is full or the segment does not fit; callers re-stack.
+    """
+    _stack_check(st, fm)
+    i = int(st.n_seg)
+    if i >= st.seg_pad:
+        raise ValueError(f"stacked catalog full ({i} == seg_pad)")
+    NB = st.blocks_pad
+    rows = _seg_rows(st, fm)
+    rep = {"n_seg": jnp.asarray(i + 1, jnp.int32)}
+    for name in ("fused", "blocks"):
+        if rows.get(name) is not None and getattr(st, name) is not None:
+            rep[name] = getattr(st, name).at[i * NB : (i + 1) * NB].set(
+                rows[name]
+            )
+    if not st.bits:
+        rep["occ"] = st.occ.at[i].set(rows["occ"])
+    rep["c_array"] = st.c_array.at[i].set(rows["c_array"])
+    rep["n_blocks"] = st.n_blocks.at[i].set(rows["n_blocks"])
+    rep["lengths"] = st.lengths.at[i].set(rows["lengths"])
+    if st.sa_sample_rate:
+        MW = st.sa_marks.shape[0] // st.seg_pad
+        MV = st.sa_vals.shape[0] // st.seg_pad
+        rep["sa_marks"] = st.sa_marks.at[i * MW : (i + 1) * MW].set(
+            rows["sa_marks"]
+        )
+        rep["sa_mark_ranks"] = st.sa_mark_ranks.at[
+            i * MW : (i + 1) * MW
+        ].set(rows["sa_mark_ranks"])
+        rep["sa_vals"] = st.sa_vals.at[i * MV : (i + 1) * MV].set(
+            rows["sa_vals"]
+        )
+    return dataclasses.replace(st, **rep)
+
+
+def stacked_replace_run(st: StackedFMIndex, start: int, count: int,
+                        fm: FMIndex) -> StackedFMIndex:
+    """Replace segments [start, start+count) with one merged segment.
+
+    The incremental stacked-catalog update after a merge compaction:
+    later segments shift left on-device (concatenation of existing leaf
+    slices — no host re-assembly of the whole catalog), bucket shapes stay
+    fixed, so steady-state compaction re-hits the same query jit programs.
+    Raises ``ValueError`` when the merged segment does not fit the bucket.
+    """
+    _stack_check(st, fm)
+    n = int(st.n_seg)
+    if not (0 <= start and count >= 1 and start + count <= n):
+        raise ValueError(f"bad run [{start}, {start + count}) of {n}")
+    rows = _seg_rows(st, fm)
+    n_new = n - count + 1
+    S = st.seg_pad
+
+    def splice(arr, unit, new_rows, fill):
+        head = arr[: (start + 1) * unit].at[
+            start * unit : (start + 1) * unit
+        ].set(new_rows)
+        tail = arr[(start + count) * unit : n * unit]
+        npad = S * unit - head.shape[0] - tail.shape[0]
+        pad = jnp.broadcast_to(
+            fill, (npad,) + arr.shape[1:]
+        ).astype(arr.dtype)
+        return jnp.concatenate([head, tail, pad])
+
+    rep = {"n_seg": jnp.asarray(n_new, jnp.int32)}
+    NB = st.blocks_pad
+    if st.bits:
+        rep["fused"] = splice(st.fused, NB, rows["fused"], 0)
+    else:
+        rep["blocks"] = splice(st.blocks, NB, rows["blocks"], PAD)
+        rep["occ"] = splice(st.occ, 1, rows["occ"][None], 0)
+    rep["c_array"] = splice(st.c_array, 1, rows["c_array"][None], 0)
+    # pad segments clamp blk to 0 and start with ep == 0 (stack invariant)
+    rep["n_blocks"] = splice(st.n_blocks, 1, rows["n_blocks"][None], 1)
+    rep["lengths"] = splice(st.lengths, 1, rows["lengths"][None], 0)
+    if st.sa_sample_rate:
+        MW = st.sa_marks.shape[0] // st.seg_pad
+        MV = st.sa_vals.shape[0] // st.seg_pad
+        rep["sa_marks"] = splice(st.sa_marks, MW, rows["sa_marks"], 0)
+        rep["sa_mark_ranks"] = splice(
+            st.sa_mark_ranks, MW, rows["sa_mark_ranks"], 0
+        )
+        rep["sa_vals"] = splice(st.sa_vals, MV, rows["sa_vals"], 0)
+    return dataclasses.replace(st, **rep)
 
 
 def _stacked_occ_batch(st: StackedFMIndex, seg, c, p):

@@ -107,6 +107,49 @@ def prepare_tokens(
     return s, sigma
 
 
+def build_index_prepared(
+    s: np.ndarray,
+    sigma: int,
+    *,
+    sample_rate: int = 64,
+    sa_config: DistSAConfig = DistSAConfig(),
+    sa_sample_rate: int = 32,
+    pack: bool | None = None,
+    fast: bool = True,
+    compress_sa: bool | None = None,
+    text_length: int | None = None,
+) -> SequenceIndex:
+    """Single-device build over an already-prepared text.
+
+    ``s`` is a ``prepare_tokens``-style token array — or a concatenation of
+    several such prepared documents, each carrying its own sentinel and pad
+    run (the rebuild strategy of ``SegmentedIndex.compact`` and the oracle
+    for ``core.bwt_merge``).  The prefix-doubling builders need no unique
+    terminal sentinel: suffixes of a multi-document text are still pairwise
+    distinct (different lengths resolve through the overflow rank), and
+    queries over the real alphabet can never match a sentinel or pad, so
+    counting semantics stay exact per document.
+    """
+    s_dev = jnp.asarray(s, jnp.int32)
+    if fast:
+        sa, stats = suffix_array_fast(
+            s_dev, sigma, local_sort=sa_config.local_sort,
+            qgram=sa_config.qgram, qgram_words=sa_config.qgram_words,
+            discard=sa_config.discard,
+        )
+    else:
+        sa, stats = suffix_array(s_dev, sigma), None
+    bwt_arr, row = bwt_from_sa(s_dev, sa)
+    sa_kw = dict(sa_sample_rate=sa_sample_rate) if sa_sample_rate else {}
+    fm = build_fm_index(bwt_arr, row, sigma, sample_rate, pack=pack,
+                        compress_sa=compress_sa,
+                        sa=sa if sa_sample_rate else None, **sa_kw)
+    n = int(s_dev.shape[0])
+    return SequenceIndex(fm, sa, bwt_arr, row, sigma, n,
+                         n if text_length is None else text_length,
+                         build_stats=stats)
+
+
 def build_index(
     tokens: np.ndarray,
     mesh: Mesh | None = None,
@@ -147,22 +190,11 @@ def build_index(
 
     if mesh is None:
         s, sigma = prepare_tokens(tokens, sample_rate, sigma, reserve_pad)
-        s_dev = jnp.asarray(s)
-        stats = None
-        if fast:
-            sa, stats = suffix_array_fast(
-                s_dev, sigma, local_sort=sa_config.local_sort,
-                qgram=sa_config.qgram, qgram_words=sa_config.qgram_words,
-                discard=sa_config.discard,
-            )
-        else:
-            sa = suffix_array(s_dev, sigma)
-        bwt_arr, row = bwt_from_sa(s_dev, sa)
-        fm = build_fm_index(bwt_arr, row, sigma, sample_rate, pack=pack,
-                            compress_sa=compress_sa,
-                            sa=sa if sa_sample_rate else None, **sa_kw)
-        return SequenceIndex(fm, sa, bwt_arr, row, sigma, len(s), text_length,
-                             build_stats=stats)
+        return build_index_prepared(
+            s, sigma, sample_rate=sample_rate, sa_config=sa_config,
+            sa_sample_rate=sa_sample_rate, pack=pack, fast=fast,
+            compress_sa=compress_sa, text_length=text_length,
+        )
 
     parts = mesh.shape[sa_config.axis]
     s, sigma = prepare_tokens(tokens, parts * sample_rate, sigma,

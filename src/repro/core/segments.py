@@ -3,26 +3,38 @@
 The paper builds one monolithic index per dataset; Sirén's *BWT for
 terabases* and the authors' follow-up *BWT on a Large Scale* instead build
 large BWTs from per-chunk structures that are merged — the natural shape
-for an index that must grow with its corpus.  This module is the query-time
-variant of that idea (LSM-tree style, as in Lucene-like search systems):
+for an index that must grow with its corpus.  This module is that idea in
+LSM-tree form (as in Lucene-like search systems):
 
 * ``append(tokens)`` builds a *new per-segment FM-index* over just the new
   text with the PR 2 fast builder — O(new segment), not O(corpus).
 * ``count`` sums per-segment counts (each an independent, embarrassingly
   parallel backward search).
-* ``locate`` offsets per-segment positions by the segment's global offset
-  and merges the candidate sets.
-* ``compact`` folds runs of small adjacent segments into one rebuilt
-  segment, bounding per-query fan-out — the background-merge half of the
-  LSM playbook.
+* ``locate`` maps per-segment positions to global coordinates and merges
+  the candidate sets.
+* ``compact`` folds runs of small adjacent segments into one segment,
+  bounding per-query fan-out — the background-merge half of the LSM
+  playbook.  The default strategy is the **rebuild-free BWT merge** of
+  ``core.bwt_merge`` (splice the per-segment BWTs via a rank-directed
+  interleave walk — no suffix sorting); ``strategy="rebuild"`` re-sorts
+  from the retained raw tokens and is the bit-identity oracle.
 
-Boundary semantics: a segment boundary is a *document* boundary.  Matches
-never span segments, exactly as matches never span the documents of a
-concatenated collection; relative to one monolithic index over the raw
-concatenation, the segmented answer differs only by occurrences crossing a
-segment boundary (and ``compact`` can only re-introduce those inside a
-merged run).  ``tests/test_segments.py`` asserts this equivalence exactly:
-segmented count == monolithic count − cross-boundary occurrences.
+Document semantics: every ``append`` creates one immutable *document*, and
+matches never span documents — exactly as matches never span the documents
+of a concatenated collection.  Compaction is **answer-invariant**: a
+merged segment indexes the concatenation of its documents' *prepared*
+texts (each sentinel-terminated and pad-filled), so old document
+boundaries survive inside the merged text — no match ever appears or
+disappears across a compact(), and counts (plus locate whenever a
+pattern's occurrences fit within ``k``) are identical before and after,
+a pure function of the append history (``tests/test_lifecycle_fuzz.py``
+asserts this at every step of randomized lifecycles).  The one
+non-guarantee: with MORE than ``k`` occurrences, *which* k are reported
+follows per-segment SA order (the same first-k rule as the monolithic
+index), and a merged segment's SA order differs from its parts' — under
+either compaction strategy.  Relative to one monolithic index over the
+raw concatenation, the segmented answer differs only by occurrences
+crossing a document boundary.
 
 All segments share one declared alphabet (``sigma``), so every segment's
 pad token sorts above every real token of *any* segment and a query over
@@ -39,23 +51,59 @@ import shutil
 
 import numpy as np
 
+from .bwt_merge import merge_eligible, merge_fm_indexes
 from .dist_suffix_array import DistSAConfig
-from .fm_index import count_stacked, locate_stacked, stack_fm_indexes
-from .pipeline import SequenceIndex, build_index
+from .fm_index import (
+    StackedFMIndex,
+    count_stacked,
+    locate_stacked,
+    stack_fm_indexes,
+    stacked_append,
+    stacked_replace_run,
+)
+from .pipeline import (
+    SequenceIndex,
+    build_index,
+    build_index_prepared,
+    prepare_tokens,
+)
 
 CATALOG_FORMAT = "segmented_index_catalog"
-CATALOG_VERSION = 1
+CATALOG_VERSION = 2  # v2: per-segment document tables (``docs``)
 
 
 @dataclasses.dataclass
 class Segment:
-    """One immutable index segment plus its placement in global coordinates."""
+    """One immutable index segment plus its placement in global coordinates.
+
+    ``docs`` lists the documents inside the segment's indexed text, in
+    *text* order: ``(raw_len, rel_start)`` per document, ``rel_start`` the
+    document's raw-token offset relative to ``offset``.  A fresh append is
+    one document; compaction concatenates document tables (documents may
+    sit out of corpus order inside a merged text — ``rel_start`` carries
+    the mapping).  ``tokens`` holds the raw tokens in the same text order.
+    """
 
     seg_id: int
     offset: int            # global position of this segment's first token
     n_tokens: int          # raw appended tokens (no sentinel, no padding)
     index: SequenceIndex
     tokens: np.ndarray     # retained corpus slice — compact() rebuild input
+    docs: tuple[tuple[int, int], ...] = None
+
+    def __post_init__(self):
+        if self.docs is None:
+            self.docs = ((self.n_tokens, 0),)
+        self.docs = tuple((int(a), int(b)) for a, b in self.docs)
+
+    @property
+    def multi_doc(self) -> bool:
+        return len(self.docs) > 1
+
+    def doc_tokens(self) -> list[np.ndarray]:
+        """Raw token arrays per document, text order."""
+        splits = np.cumsum([d[0] for d in self.docs])[:-1]
+        return np.split(self.tokens, splits)
 
 
 class SegmentedIndex:
@@ -63,9 +111,10 @@ class SegmentedIndex:
 
     ``sigma`` declares the global alphabet: all appended tokens must lie in
     [1, sigma).  Build knobs (``sample_rate``, ``sa_sample_rate``,
-    ``sa_config``, ``pack``, ``compress_sa``) apply to every segment build.
-    Query interface (``count`` / ``locate``) matches ``SequenceIndex``, so
-    ``serving.engine.FMQueryServer`` serves a segmented index unchanged.
+    ``sa_config``, ``pack``, ``compress_sa``, ``reserve_pad``) apply to
+    every segment build.  Query interface (``count`` / ``locate``) matches
+    ``SequenceIndex``, so ``serving.engine.FMQueryServer`` serves a
+    segmented index unchanged.
     """
 
     def __init__(self, sigma: int, *, sample_rate: int = 64,
@@ -73,20 +122,31 @@ class SegmentedIndex:
                  sa_config: DistSAConfig = DistSAConfig(),
                  pack: bool | None = None, compress_sa: bool | None = None,
                  segment_min_tokens: int | None = None,
-                 parallel: bool | None = None):
+                 parallel: bool | None = None,
+                 reserve_pad: bool | None = None,
+                 compact_strategy: str = "merge",
+                 compact_trigger_ratio: float = 0.5):
         if sigma < 2:
             raise ValueError("sigma must cover at least one real token")
+        if compact_strategy not in ("merge", "rebuild"):
+            raise ValueError(f"unknown compact strategy {compact_strategy!r}")
         self.sigma = sigma
         self.sample_rate = sample_rate
         self.sa_sample_rate = sa_sample_rate
         self.sa_config = sa_config
         self.pack = pack
         self.compress_sa = compress_sa
+        self.reserve_pad = reserve_pad
         self.segment_min_tokens = segment_min_tokens  # compact() default
         # segment-parallel query fan-out: None = auto (stacked dispatch
         # whenever >= 2 stackable segments), False = always sequential,
         # True = require the stacked path (raise if segments can't stack)
         self.parallel = parallel
+        # background-compaction policy (maybe_compact): strategy picks the
+        # BWT merge (with rebuild fallback) or forces rebuild; the trigger
+        # fires when >= trigger_ratio of the catalog is small segments
+        self.compact_strategy = compact_strategy
+        self.compact_trigger_ratio = compact_trigger_ratio
         self.segments: list[Segment] = []
         self._next_id = 0
         self._stacked_cache: object | None = None
@@ -107,6 +167,8 @@ class SegmentedIndex:
             pack=cfg.pack, compress_sa=cfg.compress_sa,
             segment_min_tokens=cfg.segment_min_tokens,
             parallel=cfg.serve_parallel_segments,
+            compact_strategy=cfg.compact_strategy,
+            compact_trigger_ratio=cfg.compact_trigger_ratio,
         )
 
     # -- growth --------------------------------------------------------------
@@ -120,13 +182,17 @@ class SegmentedIndex:
             tokens, sample_rate=self.sample_rate,
             sa_config=self.sa_config, sa_sample_rate=self.sa_sample_rate,
             pack=self.pack, sigma=self.sigma, compress_sa=self.compress_sa,
+            reserve_pad=self.reserve_pad,
         )
 
     def append(self, tokens) -> Segment:
-        """Index new text as a fresh segment; O(len(tokens)) work.
+        """Index new text as a fresh one-document segment; O(len(tokens)).
 
         ``tokens`` int32[m] in [1, sigma).  The new segment occupies global
-        positions [total_tokens, total_tokens + m).
+        positions [total_tokens, total_tokens + m).  When a stacked
+        fan-out catalog is live and has spare bucket capacity, the new
+        segment is written into it in place (no re-stack, no recompile —
+        ``fm_index.stacked_append``).
         """
         tokens = np.ascontiguousarray(np.asarray(tokens, np.int32))
         if tokens.size == 0:
@@ -139,31 +205,135 @@ class SegmentedIndex:
                       self._build(tokens), tokens)
         self._next_id += 1
         self.segments.append(seg)
-        self._stacked_cache = None
+        if isinstance(self._stacked_cache, StackedFMIndex):
+            try:
+                self._stacked_cache = stacked_append(
+                    self._stacked_cache, seg.index.fm
+                )
+            except ValueError:
+                self._stacked_cache = None  # full bucket: re-stack lazily
+        else:
+            self._stacked_cache = None
         return seg
 
-    def compact(self, min_tokens: int | None = None) -> int:
-        """Merge runs of adjacent small segments into one via rebuild.
+    # -- compaction ----------------------------------------------------------
+
+    def _plan_run(self, run: list[Segment]) -> tuple[list[Segment], bool]:
+        """(canonical text order, mergeable) for a compaction run.
+
+        The BWT merge requires every LEFT operand to be a single prepared
+        document, so at most one multi-document segment can participate —
+        it must anchor the fold as the rightmost text.  The walk visits
+        the RIGHT (accumulated) side of every fold, so single-document
+        segments order largest-first: the largest lands as the FINAL
+        fold's left operand and is never walked at all, and each smaller
+        segment is walked in fewer folds than anything bigger.  Both
+        strategies build this same layout, keeping them bit-identical;
+        queries cannot observe document order (``docs`` carries the
+        global-coordinate mapping).
+        """
+        multis = [s for s in run if s.multi_doc]
+        if len(multis) > 1:
+            return list(run), False  # merge ineligible; corpus order
+        singles = [s for s in run if not s.multi_doc]
+        singles.sort(key=lambda s: -s.n_tokens)  # stable: ties corpus order
+        return singles + multis, True
+
+    def _run_merge_reason(self, ordered: list[Segment]) -> str | None:
+        """Why this (canonically ordered) run cannot BWT-merge, or None.
+        Checked against the tail index only — every fold accumulator keeps
+        the tail's static layout, so pairwise eligibility is transitive."""
+        acc = ordered[-1].index.fm
+        for seg in reversed(ordered[:-1]):
+            reason = merge_eligible(seg.index.fm, acc)
+            if reason:
+                return reason
+        return None
+
+    def _merge_run(self, run: list[Segment], strategy: str) -> Segment:
+        """Fold one run of adjacent segments into a single segment."""
+        ordered, mergeable = self._plan_run(run)
+        offset = min(s.offset for s in run)
+        docs, toks = [], []
+        for seg in ordered:
+            base = seg.offset - offset
+            docs.extend((ln, base + rs) for ln, rs in seg.docs)
+            toks.append(seg.tokens)
+        tokens = np.concatenate(toks)
+        n_tokens = sum(s.n_tokens for s in run)
+
+        fm = None
+        if strategy == "merge" and mergeable \
+                and self._run_merge_reason(ordered) is None:
+            acc = ordered[-1].index.fm
+            for seg in reversed(ordered[:-1]):
+                acc = merge_fm_indexes(seg.index.fm, acc,
+                                       compress_sa=self.compress_sa,
+                                       pack=self.pack)
+            fm = acc
+        if fm is None:  # rebuild fallback/oracle: same text, same layout
+            texts, sigmas = [], []
+            for seg in ordered:
+                for d in seg.doc_tokens():
+                    s, sig = prepare_tokens(d, self.sample_rate, self.sigma,
+                                            self.reserve_pad)
+                    texts.append(s)
+                    sigmas.append(sig)
+            index = build_index_prepared(
+                np.concatenate(texts), max(sigmas),
+                sample_rate=self.sample_rate, sa_config=self.sa_config,
+                sa_sample_rate=self.sa_sample_rate, pack=self.pack,
+                compress_sa=self.compress_sa,
+                text_length=sum(ln + 1 for ln, _ in docs),
+            )
+        else:
+            index = SequenceIndex(
+                fm, None, fm.bwt, fm.row, fm.sigma, fm.length,
+                sum(ln + 1 for ln, _ in docs),
+            )
+        return Segment(self._next_id_bump(), offset, n_tokens, index,
+                       tokens, tuple(docs))
+
+    def compact(self, min_tokens: int | None = None,
+                strategy: str | None = None) -> int:
+        """Fold runs of adjacent small segments into one segment each.
 
         Segments smaller than ``min_tokens`` (None = the constructor's
         ``segment_min_tokens`` default; every segment when that is also
-        None) are grouped into maximal adjacent runs; each run of >= 2 rebuilds as a
-        single segment over the concatenated run text.  Global coordinates
-        are preserved (runs are adjacent).  Returns the number of merges
-        performed.  Within a merged run, matches spanning the old internal
-        boundaries become visible — compaction only moves the answer
-        *closer* to the monolithic one.
+        None) are grouped into maximal adjacent runs; each run of >= 2
+        becomes a single segment.  Global coordinates are preserved (runs
+        are adjacent) and **answers are invariant**: the merged segment
+        indexes the same prepared documents, so no match appears or
+        disappears — counts and in-k locate sets are bit-identical across
+        the compact (the first-k *selection* for patterns with more than
+        k occurrences follows SA order and may differ; see the module
+        docstring).  Returns the number of merges performed.
+
+        ``strategy``: "merge" (default, or the constructor's
+        ``compact_strategy``) splices the per-segment BWTs rebuild-free via
+        ``core.bwt_merge``, falling back to a rebuild for ineligible runs
+        (distributed segments, mixed layouts, more than one already-merged
+        segment in a run, SA stride not dividing a member's text);
+        "rebuild" forces the raw-token rebuild — the merge path's
+        bit-identity oracle.  A live stacked fan-out catalog is updated
+        incrementally (``fm_index.stacked_replace_run``) instead of being
+        re-assembled from scratch.
         """
+        if strategy is None:
+            strategy = self.compact_strategy
+        if strategy not in ("merge", "rebuild"):
+            raise ValueError(f"unknown compact strategy {strategy!r}")
         if min_tokens is None:
             min_tokens = self.segment_min_tokens
         merged, out, run = 0, [], []
+        replaces = []  # (old_start_idx, run_len) per merge, in order
+        idx = 0
 
         def close_run():
             nonlocal merged
             if len(run) >= 2:
-                toks = np.concatenate([s.tokens for s in run])
-                out.append(Segment(self._next_id_bump(), run[0].offset,
-                                   len(toks), self._build(toks), toks))
+                out.append(self._merge_run(run, strategy))
+                replaces.append((idx - len(run), len(run)))
                 merged += 1
             else:
                 out.extend(run)
@@ -175,10 +345,48 @@ class SegmentedIndex:
             else:
                 close_run()
                 out.append(seg)
+            idx += 1
         close_run()
         self.segments = out
-        self._stacked_cache = None
+        self._update_stacked_after_compact(replaces, out)
         return merged
+
+    def _update_stacked_after_compact(self, replaces, out) -> None:
+        """Incrementally patch the stacked catalog for each merged run
+        (indices shift as earlier runs collapse); any misfit (merged
+        segment larger than the block bucket) drops the cache for a lazy
+        full re-stack."""
+        st = self._stacked_cache
+        if not isinstance(st, StackedFMIndex) or not replaces:
+            if replaces:
+                self._stacked_cache = None
+            return
+        shift = 0  # earlier runs collapse len -> 1, shifting later indices
+        try:
+            for start, length in replaces:
+                st = stacked_replace_run(
+                    st, start - shift, length, out[start - shift].index.fm
+                )
+                shift += length - 1
+        except (ValueError, AttributeError):
+            self._stacked_cache = None
+            return
+        self._stacked_cache = st
+
+    def maybe_compact(self, strategy: str | None = None) -> int:
+        """Run ``compact`` when the background policy triggers: at least
+        two segments are below ``segment_min_tokens`` AND small segments
+        make up at least ``compact_trigger_ratio`` of the catalog.  The
+        serving path calls this after appends, so steady-state serving
+        pays O(merge) per compaction, never O(corpus) of sorting.  Returns
+        merges performed (0 when the trigger does not fire)."""
+        mt = self.segment_min_tokens
+        if mt is None or len(self.segments) < 2:
+            return 0
+        small = sum(1 for s in self.segments if s.n_tokens < mt)
+        if small < 2 or small < self.compact_trigger_ratio * len(self.segments):
+            return 0
+        return self.compact(strategy=strategy)
 
     def _next_id_bump(self) -> int:
         i = self._next_id
@@ -191,8 +399,9 @@ class SegmentedIndex:
         """The stacked bucket layout for segment-parallel fan-out, or None
         when the sequential path applies (parallel=False, < 2 segments, or
         an unstackable mixed catalog under parallel=None).  Cached; append
-        and compact invalidate.  Bucket shapes are powers of two, so the
-        cache rebuild after an append usually re-hits the same jit programs.
+        and compact patch the cache in place when the bucket fits and
+        invalidate otherwise.  Bucket shapes are powers of two, so even a
+        full rebuild after an append usually re-hits the same jit programs.
         """
         if self.parallel is False or not self.segments:
             return None
@@ -226,6 +435,27 @@ class SegmentedIndex:
         for seg in self.segments:
             total += np.asarray(seg.index.count(patterns), np.int64)
         return total
+
+    def _to_global(self, seg: Segment, pos: np.ndarray, used: np.ndarray,
+                   fill: int) -> np.ndarray:
+        """Map segment-text positions to global raw-token coordinates.
+
+        Single-document segments shift by the segment offset; merged
+        segments map piecewise through the document table (position ->
+        owning prepared document -> that document's global raw start).
+        Garbage lanes (``~used``) resolve to ``fill``.
+        """
+        if not seg.multi_doc:
+            return np.where(used, pos + seg.offset, fill)
+        r = self.sample_rate
+        lens = np.fromiter((d[0] for d in seg.docs), np.int64)
+        rels = np.fromiter((d[1] for d in seg.docs), np.int64)
+        padded = -(-(lens + 1) // r) * r
+        u_starts = np.concatenate([[0], np.cumsum(padded)[:-1]])
+        p = np.clip(pos, 0, int(padded.sum()) - 1)
+        d = np.searchsorted(u_starts, p, side="right") - 1
+        g = seg.offset + rels[d] + (p - u_starts[d])
+        return np.where(used, g, fill)
 
     def locate(self, patterns, k: int):
         """First-k *global* occurrence positions per pattern.
@@ -261,7 +491,7 @@ class SegmentedIndex:
         for seg, (pos, cnt) in zip(self.segments, per_seg):
             # only the first cnt[b] slots hold real (segment-local) positions
             used = np.arange(k)[None, :] < cnt[:, None]
-            cand.append(np.where(used, pos + seg.offset, fill))
+            cand.append(self._to_global(seg, pos, used, fill))
             counts += cnt
         allpos = np.sort(np.concatenate(cand, axis=1), axis=1)[:, :k]
         if allpos.shape[1] < k:
@@ -272,9 +502,11 @@ class SegmentedIndex:
     # -- lifecycle -----------------------------------------------------------
 
     def catalog(self) -> list[dict]:
-        """JSON-able summary of the segment layout (id, offset, size)."""
+        """JSON-able summary of the segment layout (id, offset, size,
+        document table)."""
         return [
-            {"seg_id": s.seg_id, "offset": s.offset, "n_tokens": s.n_tokens}
+            {"seg_id": s.seg_id, "offset": s.offset, "n_tokens": s.n_tokens,
+             "docs": [list(d) for d in s.docs]}
             for s in self.segments
         ]
 
@@ -308,7 +540,10 @@ class SegmentedIndex:
             "sigma": self.sigma, "sample_rate": self.sample_rate,
             "sa_sample_rate": self.sa_sample_rate,
             "pack": self.pack, "compress_sa": self.compress_sa,
+            "reserve_pad": self.reserve_pad,
             "segment_min_tokens": self.segment_min_tokens,
+            "compact_strategy": self.compact_strategy,
+            "compact_trigger_ratio": self.compact_trigger_ratio,
             "sa_config": self.sa_config._asdict(),
             "next_id": self._next_id, "segments": self.catalog(),
         }
@@ -341,7 +576,10 @@ class SegmentedIndex:
             sample_rate=cat["sample_rate"],
             sa_sample_rate=cat["sa_sample_rate"],
             pack=cat.get("pack"), compress_sa=cat.get("compress_sa"),
+            reserve_pad=cat.get("reserve_pad"),
             segment_min_tokens=cat.get("segment_min_tokens"),
+            compact_strategy=cat.get("compact_strategy", "merge"),
+            compact_trigger_ratio=cat.get("compact_trigger_ratio", 0.5),
             sa_config=DistSAConfig(**cat.get(
                 "sa_config", DistSAConfig()._asdict()
             )),
@@ -355,6 +593,9 @@ class SegmentedIndex:
             with np.load(os.path.join(seg_dir, "tokens.npz")) as z:
                 tokens = z["tokens"]
             assert len(tokens) == ent["n_tokens"], seg_dir
-            self.segments.append(Segment(ent["seg_id"], ent["offset"],
-                                         ent["n_tokens"], index, tokens))
+            self.segments.append(Segment(
+                ent["seg_id"], ent["offset"], ent["n_tokens"], index,
+                tokens, tuple(tuple(d) for d in ent.get("docs", []))
+                or ((ent["n_tokens"], 0),),
+            ))
         return self

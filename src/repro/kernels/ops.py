@@ -192,13 +192,18 @@ def rank_packed(fused, block_idx, c, cutoff, *, bits: int, sigma: int,
     int32[B] -> int32[B].  ``bits`` in {2, 4} is the packed field width.
     ``impl``: None -> backend default ("pallas" on TPU, "jnp" popcount
     fallback elsewhere); "interpret" runs the kernel in interpret mode for
-    parity testing.
+    parity testing.  ``queries_per_step`` clamps to the next power of two
+    >= B, so scalar walks (the BWT-merge interleave walk issues one- and
+    two-query dispatches per step) don't pay for 8 grid lanes of work.
     """
     impl = _rank_impl_default() if impl is None else impl
     if impl == "jnp":
         return rank_packed_jnp(fused, block_idx, c, cutoff,
                                bits=bits, sigma=sigma)
     B = block_idx.shape[0]
+    queries_per_step = min(
+        queries_per_step, 1 << max(0, B - 1).bit_length()
+    )
     pad = (-B) % queries_per_step
     if pad:
         z = jnp.zeros(pad, jnp.int32)

@@ -12,11 +12,19 @@ index so later launches skip construction entirely.
     # async frontend: admission-controlled queue, per-bucket p50/p99 SLOs
     python -m repro.launch.serve --kind dna --n 65536 --serve-async \
         --queue-depth 4096 --max-wait-ms 2 --slo-p99-ms 50
+
+    # segmented catalog: build + save, then restore and APPEND new text
+    # (BWT-merge compaction keeps the catalog small, no rebuild)
+    python -m repro.launch.serve --kind dna --n 65536 --segments 2 \
+        --ckpt-dir /tmp/cat
+    python -m repro.launch.serve --ckpt-dir /tmp/cat --restore \
+        --append new_tokens.npy --serve-async
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -39,6 +47,16 @@ def main(argv=None):
                     help="checkpoint steps to retain under --ckpt-dir")
     ap.add_argument("--restore", action="store_true",
                     help="restore from --ckpt-dir instead of building")
+    ap.add_argument("--segments", type=int, default=0,
+                    help="build a segmented catalog of this many segments "
+                         "(0 = monolithic index); saved under --ckpt-dir "
+                         "as a SegmentedIndex catalog")
+    ap.add_argument("--append", action="append", default=[],
+                    metavar="TOKENS_FILE",
+                    help="append tokens (.npy, or .npz with a 'tokens' "
+                         "array) to the restored/built segmented catalog; "
+                         "repeatable.  Triggers the background BWT-merge "
+                         "compaction policy, and re-saves to --ckpt-dir")
     ap.add_argument("--serve-async", action="store_true",
                     help="serve through the admission-controlled async "
                          "frontend (per-request submits, SLO metrics)")
@@ -55,8 +73,10 @@ def main(argv=None):
     ap.add_argument("--locate-frac", type=float, default=0.2,
                     help="fraction of async requests issued as locate")
     args = ap.parse_args(argv)
+    if args.segments > args.n:
+        ap.error(f"--segments {args.segments} exceeds --n {args.n} "
+                 "(every segment needs at least one token)")
 
-    from ..core import alphabet as al
     from ..core.dist_suffix_array import DistSAConfig
     from ..core.fm_index import PAD
     from ..core.index_io import (
@@ -66,29 +86,61 @@ def main(argv=None):
         save_index,
     )
     from ..core.pipeline import build_index
+    from ..core.segments import SegmentedIndex
     from ..data.corpus import corpus
 
     ndev = len(jax.devices())
     mesh = jax.make_mesh((ndev,), ("parts",)) if ndev > 1 else None
 
+    def load_tokens(path):
+        if path.endswith(".npz"):
+            with np.load(path) as z:
+                return np.asarray(z["tokens"], np.int32)
+        return np.asarray(np.load(path), np.int32)
+
+    appended = [load_tokens(p) for p in args.append]
+    catalog_json = (os.path.join(args.ckpt_dir, "catalog.json")
+                    if args.ckpt_dir else None)
+
     if args.restore:
         if not args.ckpt_dir:
             ap.error("--restore requires --ckpt-dir")
-        info = describe_index(args.ckpt_dir)
-        # query patterns must be sampled from the corpus the index was
-        # actually built over — the manifest knows its raw length
-        if info.text_length - 1 != args.n:
+        t0 = time.time()
+        if catalog_json and os.path.exists(catalog_json):
+            index = SegmentedIndex.load(args.ckpt_dir)
+            toks = np.concatenate([s.tokens for s in index.segments])
+            args.n = len(toks)
             print(
-                f"--n {args.n} != checkpointed corpus size "
-                f"{info.text_length - 1}; using the checkpoint's size"
+                f"restored segmented catalog ({len(index.segments)} "
+                f"segments, {index.total_tokens} tokens, "
+                f"sigma={index.sigma}) in {time.time() - t0:.1f}s"
             )
-            args.n = info.text_length - 1
+        else:
+            info = describe_index(args.ckpt_dir)
+            # query patterns must be sampled from the corpus the index was
+            # actually built over — the manifest knows its raw length
+            if info.text_length - 1 != args.n:
+                print(
+                    f"--n {args.n} != checkpointed corpus size "
+                    f"{info.text_length - 1}; using the checkpoint's size"
+                )
+                args.n = info.text_length - 1
+            toks = corpus(args.kind, args.n)
+            index = restore_index(args.ckpt_dir, mesh)
+            print(
+                f"restored {info.kind} index (n={info.length}, "
+                f"sigma={info.sigma}, bits={info.bits}) "
+                f"in {time.time() - t0:.1f}s"
+            )
+    elif args.segments > 0:
         toks = corpus(args.kind, args.n)
         t0 = time.time()
-        index = restore_index(args.ckpt_dir, mesh)
+        index = SegmentedIndex.from_config(int(toks.max()) + 1, icfg)
+        for chunk in np.array_split(toks, args.segments):
+            index.append(chunk)
         print(
-            f"restored {info.kind} index (n={info.length}, "
-            f"sigma={info.sigma}, bits={info.bits}) in {time.time() - t0:.1f}s"
+            f"segmented catalog built over {len(toks)} tokens "
+            f"({args.segments} segments) in {time.time() - t0:.1f}s"
         )
     else:
         toks = corpus(args.kind, args.n)
@@ -107,8 +159,34 @@ def main(argv=None):
                 f"in {time.time() - t0:.1f}s"
             )
 
-    s = al.append_sentinel(toks)
+    segmented = isinstance(index, SegmentedIndex)
+    if appended and not segmented:
+        ap.error("--append requires a segmented catalog "
+                 "(--segments N, or --restore of one)")
+    if appended and not args.serve_async:
+        # synchronous appends; the async path routes them through the
+        # frontend's control queue instead (compaction between flushes)
+        for extra in appended:
+            index.append(extra)
+            merges = index.maybe_compact()
+            print(f"appended {len(extra)} tokens "
+                  f"({merges} merge compactions, "
+                  f"{len(index.segments)} segments)")
+    if segmented and args.ckpt_dir and not args.serve_async:
+        index.save(args.ckpt_dir)
+        print(f"segmented catalog saved to {args.ckpt_dir}")
+
+    # sample query patterns from every text source, so --append serving
+    # (sync and async alike) exercises old and new segments
+    sources = [toks] + appended
     rng = np.random.default_rng(0)
+
+    def sample(active_sources):
+        src = active_sources[int(rng.integers(len(active_sources)))]
+        hi = min(args.pattern_len, len(src) - 1)
+        L = int(rng.integers(3, hi)) if hi > 3 else max(1, hi)
+        st = int(rng.integers(0, max(1, len(src) - L)))
+        return src[st : st + L]
 
     if args.serve_async:
         import json
@@ -117,19 +195,32 @@ def main(argv=None):
         from ..serving.frontend import AsyncQueryFrontend, Rejected
 
         server = FMQueryServer.from_config(index, icfg)
-        can_locate = getattr(index.fm, "sa_sample_rate", 0) != 0
+        can_locate = (getattr(index, "sa_sample_rate", 0)
+                      or getattr(getattr(index, "fm", None),
+                                 "sa_sample_rate", 0)) != 0
+
         with AsyncQueryFrontend(
             server, max_queue=args.queue_depth, max_wait_ms=args.max_wait_ms,
             slo_p99_ms={"count": args.slo_p99_ms,
                         "locate": args.slo_p99_ms_locate},
         ) as fe:
             futs = []
-            for _ in range(args.batches * args.batch):
-                L = int(rng.integers(3, args.pattern_len))
-                st = int(rng.integers(0, args.n - L - 1))
+            total = args.batches * args.batch
+            for _ in range(total // 2 if appended else total):
                 kind = ("locate" if can_locate
                         and rng.random() < args.locate_frac else "count")
-                futs.append(fe.submit(s[st : st + L], kind))
+                futs.append(fe.submit(sample([toks]), kind))
+            for extra in appended:
+                # live growth between flushes: append + merge compaction
+                # on the worker thread, queries keep flowing
+                info = fe.append(extra).result()
+                print(f"async-appended {info['appended']} tokens "
+                      f"({info['merges']} merge compactions, "
+                      f"{info['segments']} segments)")
+            for _ in range(total - len(futs)):
+                kind = ("locate" if can_locate
+                        and rng.random() < args.locate_frac else "count")
+                futs.append(fe.submit(sample(sources), kind))
             hits = shed = 0
             for f in futs:
                 r = f.result()
@@ -138,6 +229,9 @@ def main(argv=None):
                 else:
                     hits += r.count
             m = fe.metrics()
+        if segmented and args.ckpt_dir:
+            index.save(args.ckpt_dir)
+            print(f"segmented catalog saved to {args.ckpt_dir}")
         print(json.dumps(m, indent=2))
         print(
             f"async-serve: {m['completed']} answered "
@@ -150,9 +244,8 @@ def main(argv=None):
     for _ in range(args.batches):
         pats = np.full((args.batch, args.pattern_len), PAD, np.int32)
         for i in range(args.batch):
-            L = rng.integers(3, args.pattern_len)
-            st = rng.integers(0, args.n - L - 1)
-            pats[i, :L] = s[st : st + L]
+            p = sample(sources)
+            pats[i, : len(p)] = p
         t0 = time.perf_counter()
         counts = np.asarray(index.count(pats))
         lats.append(time.perf_counter() - t0)

@@ -21,6 +21,13 @@ distributed index):
   enqueue-to-resolve latency under its jit bucket (kind + padded length);
   ``metrics()`` exports p50/p99 per bucket plus shed/throughput counters,
   checked against per-kind p99 SLO targets.
+* **Live appends**: when the served index is a ``SegmentedIndex``,
+  ``append`` enqueues an index-growth control op.  The flush worker (the
+  single thread owning all index dispatches, so growth never races a
+  query) applies it *between* flushes and then runs the background
+  compaction policy (``maybe_compact`` — rebuild-free BWT-merge by
+  default), so steady-state serving absorbs appends without ever paying a
+  full O(corpus) re-sort.
 """
 
 from __future__ import annotations
@@ -113,6 +120,8 @@ class AsyncQueryFrontend:
         self._cond = threading.Condition(self._lock)
         # (t_enqueue, pattern, kind, k, future) — append under the lock only
         self._pending: deque = deque()
+        # (tokens, future) index-growth ops, drained before each flush
+        self._control: deque = deque()
         self._stop = False
         self._thread: threading.Thread | None = None
         self._t_start = time.perf_counter()
@@ -120,6 +129,8 @@ class AsyncQueryFrontend:
         self.rejected = 0
         self.completed = 0
         self.flushes = 0
+        self.appends = 0
+        self.compactions = 0
         self._buckets: dict[str, _BucketStats] = {}
         if autostart:
             self.start()
@@ -192,6 +203,31 @@ class AsyncQueryFrontend:
             self._cond.notify()
         return fut
 
+    def append(self, tokens) -> Future:
+        """Grow the served ``SegmentedIndex`` without stopping the frontend.
+
+        Enqueues an index-growth control op; the flush worker applies it
+        between flushes (appends a segment, then runs the background
+        compaction policy — ``SegmentedIndex.maybe_compact``, rebuild-free
+        BWT merge by default).  Returns a future resolving to a summary
+        dict {"appended", "merges", "segments", "total_tokens"}.  Queries
+        admitted after the future resolves see the new text.  Control ops
+        are never shed (they carry corpus data, not load).
+        """
+        if not hasattr(self.server.index, "append"):
+            raise TypeError(
+                f"served index {type(self.server.index).__name__} does not "
+                "support append (serve a SegmentedIndex)"
+            )
+        fut: Future = Future()
+        toks = np.asarray(tokens, np.int32)
+        with self._cond:
+            if self._stop:
+                raise RuntimeError("frontend is stopped")
+            self._control.append((toks, fut))
+            self._cond.notify()
+        return fut
+
     @property
     def queue_depth(self) -> int:
         with self._lock:
@@ -199,16 +235,23 @@ class AsyncQueryFrontend:
 
     # -- worker side ---------------------------------------------------------
 
-    def _take_batch(self) -> list | None:
-        """Block until a flushable batch exists (coalescing), the whole
-        pending queue once max-batch/max-wait trips; None = stopped and
+    def _take_work(self):
+        """Block until there is work: ("ctrl", ops) for pending index
+        growth (always drained before the next flush), ("batch", requests)
+        once max-batch/max-wait coalescing trips, None = stopped and
         drained."""
         with self._cond:
-            while not self._pending and not self._stop:
+            while (not self._pending and not self._control
+                   and not self._stop):
                 self._cond.wait()
+            if self._control:
+                ctrl = list(self._control)
+                self._control.clear()
+                return "ctrl", ctrl
             if not self._pending:
                 return None                   # stopping, nothing left
-            while len(self._pending) < self.max_batch and not self._stop:
+            while (len(self._pending) < self.max_batch and not self._stop
+                   and not self._control):    # appends cut coalescing short
                 oldest = self._pending[0][0]
                 remaining = oldest + self.max_wait_s - time.perf_counter()
                 if remaining <= 0:
@@ -216,19 +259,50 @@ class AsyncQueryFrontend:
                 self._cond.wait(remaining)
             batch = list(self._pending)
             self._pending.clear()
-            return batch
+            return "batch", batch
 
     def _run(self) -> None:
         while True:
-            batch = self._take_batch()
-            if batch is None:
+            work = self._take_work()
+            if work is None:
                 return
-            self._flush_batch(batch)
+            kind, items = work
+            if kind == "ctrl":
+                self._apply_controls(items)
+            else:
+                self._flush_batch(items)
+
+    def _apply_controls(self, ctrl: list) -> None:
+        """Apply index-growth ops on the worker thread (the only thread
+        dispatching into the index, so growth cannot race a flush)."""
+        for toks, fut in ctrl:
+            if not fut.set_running_or_notify_cancel():
+                continue
+            try:
+                index = self.server.index
+                seg = index.append(toks)
+                merges = index.maybe_compact()
+                out = {
+                    "appended": int(seg.n_tokens), "merges": int(merges),
+                    "segments": len(index.segments),
+                    "total_tokens": int(index.total_tokens),
+                }
+            except Exception as e:  # noqa: BLE001 — worker must survive
+                fut.set_exception(e)
+                continue
+            with self._lock:
+                self.appends += 1
+                self.compactions += merges
+            fut.set_result(out)
 
     def _drain_inline(self) -> None:
         with self._cond:
+            ctrl = list(self._control)
+            self._control.clear()
             batch = list(self._pending)
             self._pending.clear()
+        if ctrl:
+            self._apply_controls(ctrl)
         if batch:
             self._flush_batch(batch)
 
@@ -290,6 +364,8 @@ class AsyncQueryFrontend:
                 "rejected": self.rejected,
                 "completed": self.completed,
                 "flushes": self.flushes,
+                "appends": self.appends,
+                "compactions": self.compactions,
                 "shed_frac": self.rejected / offered if offered else 0.0,
                 "qps": self.completed / elapsed if elapsed > 0 else 0.0,
                 "queue_depth": len(self._pending),

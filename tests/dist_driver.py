@@ -458,8 +458,68 @@ def scenario_index_io():
     print("index_io re-mesh ok")
 
 
+def scenario_seg_merge():
+    """Merge-vs-rebuild compaction parity with forced host devices present:
+    segment builds stay single-device, and the BWT-merge walk must produce
+    the identical index (and identical answers) no matter how many devices
+    the backend exposes.  Also exercises the rebuild fallback for a run
+    with two already-merged (multi-document) segments."""
+    from repro.core.fm_index import PAD
+    from repro.core.segments import SegmentedIndex
+
+    assert len(jax.devices()) == DEVICES
+    rng = np.random.default_rng(41)
+    sigma = 5
+    chunks = [rng.integers(1, sigma, n).astype(np.int32)
+              for n in (3 * DEVICES, 20, 7 * DEVICES, 33)]
+    seg_m = SegmentedIndex(sigma, sample_rate=8, sa_sample_rate=4)
+    seg_r = SegmentedIndex(sigma, sample_rate=8, sa_sample_rate=4)
+    for c in chunks:
+        seg_m.append(c)
+        seg_r.append(c)
+
+    full = np.concatenate(chunks)
+    B, L = 12, 5
+    pats = np.full((B, L), PAD, np.int32)
+    for b in range(B):
+        m = int(rng.integers(1, L + 1))
+        st = int(rng.integers(0, len(full) - m))
+        pats[b, :m] = full[st : st + m]
+    k = 2 * len(full)
+    want_c = seg_m.count(pats)
+    want_p, want_k = seg_m.locate(pats, k)
+
+    assert seg_m.compact(strategy="merge") == 1
+    assert seg_r.compact(strategy="rebuild") == 1
+    from repro.core.fm_index import fm_mismatch
+
+    diff = fm_mismatch(seg_m.segments[0].index.fm,
+                       seg_r.segments[0].index.fm)
+    assert not diff, diff
+    assert np.array_equal(seg_m.count(pats), want_c), "answers changed"
+    pos, cnt = seg_m.locate(pats, k)
+    assert np.array_equal(pos, want_p) and np.array_equal(cnt, want_k)
+
+    # two multi-document segments in one run: merge must FALL BACK to the
+    # rebuild (a multi-document text can only be the right operand), and
+    # answers must still be invariant
+    for s in (seg_m, seg_r):
+        s.append(rng.integers(1, sigma, 16).astype(np.int32))
+        s.append(rng.integers(1, sigma, 24).astype(np.int32))
+        assert s.compact() == 1 and len(s.segments) == 1
+    seg_m.segments += seg_r.segments  # adjacent multi-doc pair (synthetic)
+    seg_m.segments[1].offset = seg_m.segments[0].n_tokens
+    seg_m._stacked_cache = None
+    assert seg_m._plan_run(seg_m.segments)[1] is False
+    c_before = seg_m.count(pats)
+    assert seg_m.compact(strategy="merge") == 1  # silently rebuilds
+    assert np.array_equal(seg_m.count(pats), c_before)
+    print("seg_merge parity ok")
+
+
 SCENARIOS = {
     "pipeline": scenario_pipeline,
+    "seg_merge": scenario_seg_merge,
     "index_io": scenario_index_io,
     "elastic": scenario_elastic,
     "bitonic_sort": scenario_bitonic_sort,

@@ -1,0 +1,197 @@
+"""Randomized lifecycle conformance: deterministic-seed interleavings of
+append / compact(merge) / compact(rebuild) / save / load / count / locate,
+asserted bit-identical against a document-set oracle at EVERY step.
+
+The invariant under test is the document semantics of ``SegmentedIndex``:
+answers are a pure function of the append history — matches never span
+documents, and compaction (either strategy) never changes any answer.  On
+top of the answer oracle, every compaction step is shadow-run with the
+OTHER strategy and the resulting merged indexes compared field-by-field:
+``compact(strategy="merge")`` must be bit-identical to
+``compact(strategy="rebuild")`` (the BWT-merge acceptance criterion).
+
+The matrix covers sigma in {2, 4, 16, 17} — the 2-bit/4-bit/unpacked
+packing boundaries after the reserved pad slot — and both ``reserve_pad``
+layouts (reserve off lets the effective alphabet vary per segment, which
+exercises the rebuild fallback on mixed catalogs).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.fm_index import PAD, fm_mismatch
+from repro.core.segments import SegmentedIndex
+
+SAMPLE_RATE = 8
+SA_SAMPLE_RATE = 4
+# quantized so the whole suite reuses a handful of jit program shapes
+DOC_LENS = (1, 3, 5, 8, 13, 21, 34)
+
+
+class DocOracle:
+    """Ground truth: the bag of appended documents in global coordinates."""
+
+    def __init__(self):
+        self.docs: list[tuple[np.ndarray, int]] = []
+        self.total = 0
+
+    def append(self, tokens):
+        self.docs.append((np.asarray(tokens), self.total))
+        self.total += len(tokens)
+
+    def patterns(self, rng, B=8, L=5, sigma=4):
+        """PAD-padded queries: mostly corpus substrings, some random (often
+        absent, possibly out-of-segment-alphabet)."""
+        pats = np.full((B, L), PAD, np.int32)
+        lens = np.zeros(B, np.int64)
+        for b in range(B):
+            m = int(rng.integers(1, L + 1))
+            lens[b] = m
+            doc, _ = self.docs[int(rng.integers(len(self.docs)))]
+            if rng.random() < 0.25 or len(doc) < m:
+                pats[b, :m] = rng.integers(1, sigma, m)
+            else:
+                st = int(rng.integers(0, len(doc) - m + 1))
+                pats[b, :m] = doc[st : st + m]
+        return pats, lens
+
+    def expected(self, pats, lens, k):
+        B = pats.shape[0]
+        counts = np.zeros(B, np.int64)
+        pos = np.full((B, k), self.total, np.int64)
+        kcnt = np.zeros(B, np.int64)
+        for b in range(B):
+            p = pats[b, : lens[b]]
+            hits = []
+            for doc, off in self.docs:
+                if len(p) > len(doc):
+                    continue
+                w = np.lib.stride_tricks.sliding_window_view(doc, len(p))
+                hits += (np.nonzero((w == p).all(axis=1))[0] + off).tolist()
+            hits = sorted(hits)
+            counts[b] = len(hits)
+            kcnt[b] = min(len(hits), k)
+            pos[b, : kcnt[b]] = hits[: kcnt[b]]
+        return counts, pos, kcnt
+
+
+def assert_fm_identical(a, b, ctx):
+    assert not (diff := fm_mismatch(a, b)), (ctx, diff)
+
+
+def check_answers(seg, oracle, rng, sigma, ctx):
+    if not oracle.docs:
+        return
+    pats, lens = oracle.patterns(rng, sigma=sigma)
+    k = 2 * oracle.total + 2  # no clipping: full position sets must match
+    want_c, want_p, want_k = oracle.expected(pats, lens, k)
+    got_c = seg.count(pats)
+    assert np.array_equal(got_c, want_c), (ctx, "count")
+    got_p, got_k = seg.locate(pats, k)
+    assert np.array_equal(got_k, want_k), (ctx, "locate counts")
+    assert np.array_equal(got_p, want_p), (ctx, "locate positions")
+
+
+def shadow_compact_identical(seg, min_tokens, strategy, ctx):
+    """Run compact under BOTH strategies from the same state; assert the
+    merged segments come out bit-identical, then leave ``seg`` compacted
+    with ``strategy``."""
+    snap_segments, snap_next = list(seg.segments), seg._next_id
+    before_ids = {s.seg_id for s in snap_segments}
+
+    results = {}
+    for strat in ("merge", "rebuild"):
+        seg.segments, seg._next_id = list(snap_segments), snap_next
+        seg._stacked_cache = None
+        merged = seg.compact(min_tokens=min_tokens, strategy=strat)
+        results[strat] = (merged, list(seg.segments), seg._next_id)
+    assert results["merge"][0] == results["rebuild"][0], ctx
+    segs_m, segs_r = results["merge"][1], results["rebuild"][1]
+    assert len(segs_m) == len(segs_r), ctx
+    for sm, sr in zip(segs_m, segs_r):
+        assert (sm.offset, sm.n_tokens, sm.docs) == \
+            (sr.offset, sr.n_tokens, sr.docs), ctx
+        if sm.seg_id in before_ids:
+            continue  # untouched segment, same object
+        assert_fm_identical(sm.index.fm, sr.index.fm, ctx)
+    merged, segments, next_id = results[strategy]
+    seg.segments, seg._next_id = segments, next_id
+    seg._stacked_cache = None
+    return merged
+
+
+@pytest.mark.parametrize("reserve_pad", [None, False],
+                         ids=["reserve", "noreserve"])
+@pytest.mark.parametrize("sigma", [2, 4, 16, 17])
+def test_lifecycle_fuzz(sigma, reserve_pad, tmp_path):
+    rng = np.random.default_rng(1000 * sigma + (0 if reserve_pad is None
+                                                else 1))
+    seg = SegmentedIndex(
+        sigma, sample_rate=SAMPLE_RATE, sa_sample_rate=SA_SAMPLE_RATE,
+        reserve_pad=reserve_pad, segment_min_tokens=64,
+    )
+    oracle = DocOracle()
+    save_dir = str(tmp_path / "cat")
+    compacts = 0
+
+    for step in range(14):
+        roll = rng.random()
+        ctx = (sigma, reserve_pad, step)
+        if not oracle.docs or roll < 0.45:
+            m = int(rng.choice(DOC_LENS))
+            toks = rng.integers(1, sigma, m).astype(np.int32)
+            seg.append(toks)
+            oracle.append(toks)
+        elif roll < 0.70 and len(seg.segments) >= 2:
+            strategy = "merge" if rng.random() < 0.7 else "rebuild"
+            # merge every current segment half the time, only small ones
+            # the other half (exercises runs bounded by large segments)
+            min_tokens = None if rng.random() < 0.5 else 40
+            compacts += shadow_compact_identical(
+                seg, min_tokens, strategy, ctx
+            )
+        elif roll < 0.85:
+            seg.save(save_dir)
+            seg = SegmentedIndex.load(save_dir)
+            assert seg.total_tokens == oracle.total, ctx
+        # every step ends in a full query cross-check
+        check_answers(seg, oracle, rng, sigma, ctx)
+
+    if compacts == 0:  # schedule rolled no compact: force one at the end
+        while len(seg.segments) < 2:
+            toks = rng.integers(1, sigma, DOC_LENS[2]).astype(np.int32)
+            seg.append(toks)
+            oracle.append(toks)
+        compacts += shadow_compact_identical(
+            seg, None, "merge", (sigma, reserve_pad, "forced")
+        )
+        check_answers(seg, oracle, rng, sigma,
+                      (sigma, reserve_pad, "forced"))
+    assert compacts >= 1
+    # final save/load round-trip must preserve the document tables exactly
+    seg.save(save_dir)
+    loaded = SegmentedIndex.load(save_dir)
+    assert loaded.catalog() == seg.catalog()
+    check_answers(loaded, oracle, rng, sigma, (sigma, reserve_pad, "final"))
+
+
+def test_fuzz_compaction_of_compactions():
+    """Repeated merge-of-merged segments (multi-document right operands,
+    the wrap-correction path) stay exact and bit-identical to rebuild."""
+    sigma = 4
+    rng = np.random.default_rng(7)
+    seg = SegmentedIndex(sigma, sample_rate=SAMPLE_RATE,
+                         sa_sample_rate=SA_SAMPLE_RATE)
+    oracle = DocOracle()
+    for round_ in range(4):
+        for _ in range(3):
+            m = int(rng.choice(DOC_LENS))
+            # adversarial: repeat one document often so merged texts are
+            # periodic (order of prefix-pair suffixes depends on context)
+            toks = (np.full(m, 1, np.int32) if rng.random() < 0.4
+                    else rng.integers(1, sigma, m).astype(np.int32))
+            seg.append(toks)
+            oracle.append(toks)
+        shadow_compact_identical(seg, None, "merge", round_)
+        assert len(seg.segments) == 1 and seg.segments[0].multi_doc
+        check_answers(seg, oracle, rng, sigma, round_)

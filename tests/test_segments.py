@@ -107,22 +107,49 @@ class TestAppendParity:
 
 
 class TestCompact:
-    def test_compact_all_equals_monolithic(self):
+    def test_compact_is_answer_invariant(self):
+        """Compaction never changes an answer: documents keep their own
+        sentinels inside the merged text, so counts AND (unclipped) locate
+        sets are identical before and after — under both strategies."""
         rng = np.random.default_rng(9)
-        chunks, full, _ = _corpus(rng)
-        seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8)
-        for c in chunks:
-            seg.append(c)
-        mono = build_index(full, sample_rate=16, sa_sample_rate=8)
-        assert seg.compact() == 1 and len(seg.segments) == 1
-        pats, lens = _patterns(rng, full)
-        assert np.array_equal(seg.count(pats),
-                              np.asarray(mono.count(pats), np.int64))
-        k = 2 * len(full)
-        pos, cnt = seg.locate(pats, k)
-        for b in range(pats.shape[0]):
-            hits = _occurrences(full, pats[b, : lens[b]])
-            assert sorted(pos[b, : cnt[b]]) == sorted(hits), b
+        chunks, full, offsets = _corpus(rng)
+        for strategy in ("merge", "rebuild"):
+            seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8)
+            for c in chunks:
+                seg.append(c)
+            pats, lens = _patterns(rng, full)
+            k = 2 * len(full)
+            before_c = seg.count(pats)
+            before_p, before_k = seg.locate(pats, k)
+            assert seg.compact(strategy=strategy) == 1
+            assert len(seg.segments) == 1 and seg.segments[0].multi_doc
+            assert np.array_equal(seg.count(pats), before_c), strategy
+            pos, cnt = seg.locate(pats, k)
+            assert np.array_equal(pos, before_p), strategy
+            assert np.array_equal(cnt, before_k), strategy
+            # and the answers are exactly the within-document hits
+            for b in range(pats.shape[0]):
+                hits = _occurrences(full, pats[b, : lens[b]])
+                within, _ = _split_hits(hits, offsets, lens[b])
+                assert sorted(pos[b, : cnt[b]]) == sorted(within), b
+
+    def test_merge_equals_rebuild_bit_identical(self):
+        """The BWT-merge strategy must produce the very same FMIndex the
+        raw-token rebuild produces — every array, every aux field."""
+        rng = np.random.default_rng(19)
+        chunks, _, _ = _corpus(rng)
+        segs = {}
+        for strategy in ("merge", "rebuild"):
+            seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8)
+            for c in chunks:
+                seg.append(c)
+            assert seg.compact(strategy=strategy) == 1
+            segs[strategy] = seg.segments[0]
+        a, b = segs["merge"], segs["rebuild"]
+        assert a.docs == b.docs and a.offset == b.offset
+        from repro.core.fm_index import fm_mismatch
+
+        assert not (diff := fm_mismatch(a.index.fm, b.index.fm)), diff
 
     def test_compact_threshold_preserves_large_segments(self):
         rng = np.random.default_rng(10)
@@ -136,15 +163,30 @@ class TestCompact:
         assert seg.compact(min_tokens=100) == 2
         assert [s.n_tokens for s in seg.segments] == [70, 600, 45]
         assert [s.offset for s in seg.segments] == [0, 70, 670]
-        after = seg.count(pats)
-        # merged runs may only ADD previously-missed boundary matches
-        assert np.all(after >= before)
+        # document semantics: compaction is answer-invariant, exactly
+        assert np.array_equal(seg.count(pats), before)
 
     def test_compact_noop_on_single_segment(self):
         rng = np.random.default_rng(11)
         seg = SegmentedIndex(SIGMA)
         seg.append(rng.integers(1, SIGMA, 100).astype(np.int32))
         assert seg.compact() == 0 and len(seg.segments) == 1
+
+    def test_maybe_compact_policy(self):
+        """Background trigger: fires once small segments are >= 2 and make
+        up at least trigger_ratio of the catalog."""
+        rng = np.random.default_rng(23)
+        seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8,
+                             segment_min_tokens=100,
+                             compact_trigger_ratio=0.5)
+        seg.append(rng.integers(1, SIGMA, 400).astype(np.int32))
+        seg.append(rng.integers(1, SIGMA, 30).astype(np.int32))
+        assert seg.maybe_compact() == 0      # one small of two: ratio met,
+        #                                      but a run needs >= 2 smalls
+        seg.append(rng.integers(1, SIGMA, 40).astype(np.int32))
+        assert seg.maybe_compact() == 1      # 2/3 small -> merge the run
+        assert [len(s.docs) for s in seg.segments] == [1, 2]
+        assert seg.maybe_compact() == 0      # nothing small is adjacent
 
 
 class TestLifecycle:
@@ -239,3 +281,121 @@ class TestLifecycle:
             assert g == len(within)
         pos = server.locate([full[:4]], k=8)[0]
         assert 0 in pos
+
+
+class TestMergeEdgeCases:
+    """BWT-merge corner coverage: empty/one-symbol operands, SA-sample
+    bit-width growth across a merge, and in-place stacked append after a
+    merge (no recompilation)."""
+
+    def _build_prepared(self, tokens, sigma_declared, r=8, srate=4):
+        from repro.core.pipeline import build_index_prepared, prepare_tokens
+
+        s, sig = prepare_tokens(np.asarray(tokens, np.int32), r,
+                                sigma_declared)
+        return build_index_prepared(s, sig, sample_rate=r,
+                                    sa_sample_rate=srate), s, sig
+
+    def _assert_merge_equals_rebuild(self, docs, sigma_declared, r=8,
+                                     srate=4):
+        from repro.core.bwt_merge import merge_fm_indexes
+        from repro.core.pipeline import build_index_prepared, prepare_tokens
+
+        preps = [prepare_tokens(np.asarray(d, np.int32), r,
+                                sigma_declared)[0] for d in docs]
+        sig = sigma_declared + 1
+        acc = self._build_prepared(docs[-1], sigma_declared, r, srate)[0].fm
+        for d in reversed(docs[:-1]):
+            left = self._build_prepared(d, sigma_declared, r, srate)[0].fm
+            acc = merge_fm_indexes(left, acc)
+        want = build_index_prepared(
+            np.concatenate(preps), sig, sample_rate=r, sa_sample_rate=srate,
+        ).fm
+        from repro.core.fm_index import fm_mismatch
+
+        assert not (diff := fm_mismatch(acc, want)), diff
+        return acc
+
+    def test_empty_right_document(self):
+        """An empty document (sentinel + pads only) merges exactly — as the
+        right operand AND as the left."""
+        rng = np.random.default_rng(31)
+        body = rng.integers(1, 5, 20).astype(np.int32)
+        self._assert_merge_equals_rebuild([body, []], 5)
+        self._assert_merge_equals_rebuild([[], body], 5)
+        self._assert_merge_equals_rebuild([[], []], 5)
+
+    def test_single_symbol_segments(self):
+        """Length-1 (and unary) segments: maximal padding, periodic merged
+        text — the adversarial case for the interleave walk."""
+        seg = SegmentedIndex(3, sample_rate=8, sa_sample_rate=4)
+        for _ in range(3):
+            seg.append(np.array([1], np.int32))
+        pats = np.array([[1, PAD], [1, 1], [2, PAD]], np.int32)
+        assert list(seg.count(pats)) == [3, 0, 0]
+        before_p, before_c = seg.locate(pats, 8)
+        assert seg.compact(strategy="merge") == 1
+        assert list(seg.count(pats)) == [3, 0, 0]
+        pos, cnt = seg.locate(pats, 8)
+        assert np.array_equal(pos, before_p) and np.array_equal(cnt, before_c)
+        self._assert_merge_equals_rebuild([[1], [1], [1]], 3)
+
+    def test_sa_val_bits_grows_across_merge(self):
+        """Merging can push the packed SA-value quotient past a power of
+        two: the merged stream re-packs at the wider width, identical to
+        what a rebuild computes."""
+        rng = np.random.default_rng(33)
+        seg = SegmentedIndex(5, sample_rate=8, sa_sample_rate=4)
+        for _ in range(2):
+            seg.append(rng.integers(1, 5, 27).astype(np.int32))
+        per_seg_bits = {s.index.fm.sa_val_bits for s in seg.segments}
+        assert per_seg_bits == {3}  # 32 positions / stride 4 -> q_max 7
+        assert seg.compact(strategy="merge") == 1
+        merged = seg.segments[0].index.fm
+        assert merged.sa_val_bits == 4  # 64 positions -> q_max 15
+        rng2 = np.random.default_rng(33)
+        seg2 = SegmentedIndex(5, sample_rate=8, sa_sample_rate=4)
+        for _ in range(2):
+            seg2.append(rng2.integers(1, 5, 27).astype(np.int32))
+        assert seg2.compact(strategy="rebuild") == 1
+        assert seg2.segments[0].index.fm.sa_val_bits == 4
+        assert np.array_equal(np.asarray(merged.sa_vals),
+                              np.asarray(seg2.segments[0].index.fm.sa_vals))
+
+    def test_merge_then_stacked_append_no_recompile(self):
+        """After a merge compaction patched into the stacked catalog, an
+        append into spare pow2 capacity must reuse the already-compiled
+        stacked query program: n_seg is a pytree LEAF, and both the
+        replace and the append preserve every static shape."""
+        from repro.core.fm_index import StackedFMIndex, count_stacked
+
+        rng = np.random.default_rng(37)
+        seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8,
+                             parallel=True)
+        seg.append(rng.integers(1, SIGMA, 700).astype(np.int32))
+        for n in (40, 50, 30):
+            seg.append(rng.integers(1, SIGMA, n).astype(np.int32))
+        pats, _ = _patterns(rng, seg.segments[0].tokens, B=8, L=4)
+        want = seg.count(pats)
+        assert isinstance(seg._stacked_cache, StackedFMIndex)
+        compiles_before = count_stacked._cache_size()
+        st_before = seg._stacked_cache
+
+        assert seg.compact(min_tokens=100, strategy="merge") == 1
+        assert isinstance(seg._stacked_cache, StackedFMIndex), \
+            "merge within the block bucket must patch the cache in place"
+        assert np.array_equal(seg.count(pats), want)
+
+        seg.append(rng.integers(1, SIGMA, 35).astype(np.int32))
+        assert seg._stacked_cache is not None
+        assert int(seg._stacked_cache.n_seg) == 3
+        assert seg._stacked_cache.seg_pad == st_before.seg_pad
+        assert seg._stacked_cache.blocks_pad == st_before.blocks_pad
+        got = seg.count(pats)
+        assert count_stacked._cache_size() == compiles_before, \
+            "stacked append/replace recompiled the query program"
+        # sequential path agrees with the patched stacked catalog
+        seg.parallel = False
+        seq = seg.count(pats)
+        seg.parallel = True
+        assert np.array_equal(got, seq)

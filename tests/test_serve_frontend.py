@@ -285,3 +285,81 @@ class TestSegmentParallelParity:
         assert seg._stacked() is None  # auto: no stacking for one segment
         seg.parallel = True
         assert seg._stacked() is not None  # forced: stack of one works
+
+
+class TestFrontendAppend:
+    """Live index growth through the async frontend: appends apply between
+    flushes on the worker thread, trigger the background merge-compaction
+    policy, and queries spanning old and appended segments answer exactly."""
+
+    def _segmented(self, rng, n=600):
+        seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8,
+                             segment_min_tokens=1 << 10,
+                             compact_trigger_ratio=0.5)
+        seg.append(rng.integers(1, SIGMA, n).astype(np.int32))
+        return seg
+
+    def test_append_grows_index_and_compacts(self):
+        rng = np.random.default_rng(17)
+        seg = self._segmented(rng)
+        old = seg.segments[0].tokens
+        new = rng.integers(1, SIGMA, 200).astype(np.int32)
+        with AsyncQueryFrontend(_server(seg), max_queue=64) as fe:
+            before = fe.submit(old[5:10]).result(timeout=120)
+            info = fe.append(new).result(timeout=120)
+            # policy: 2/2 segments small -> merge compaction fires
+            assert info["appended"] == 200 and info["merges"] == 1
+            assert info["segments"] == 1
+            assert info["total_tokens"] == len(old) + 200
+            after_old = fe.submit(old[5:10]).result(timeout=120)
+            after_new = fe.submit(new[50:55]).result(timeout=120)
+            m = fe.metrics()
+        assert after_old.count == before.count  # compaction is invariant
+        full_docs = [old, new]
+        want = sum(count_naive(d, new[50:55]) for d in full_docs)
+        assert after_new.count == want and want >= 1
+        assert m["appends"] == 1 and m["compactions"] == 1
+
+    def test_append_rejected_for_monolithic_index(self, built):
+        _, toks, index = built
+        with AsyncQueryFrontend(_server(index), max_queue=8) as fe:
+            with pytest.raises(TypeError, match="append"):
+                fe.append(toks[:16])
+
+    def test_append_error_resolves_future_and_worker_survives(self):
+        rng = np.random.default_rng(18)
+        seg = self._segmented(rng)
+        with AsyncQueryFrontend(_server(seg), max_queue=8) as fe:
+            bad = fe.append(np.array([99], np.int32))  # out of alphabet
+            with pytest.raises(ValueError):
+                bad.result(timeout=120)
+            ok = fe.submit(seg.segments[0].tokens[:6])
+            assert ok.result(timeout=120).count >= 1
+
+    def test_serve_launcher_append_flow(self, tmp_path):
+        """launch.serve end-to-end: build+save a segmented catalog, then
+        restore + --append + --serve-async; the appended text must be
+        queryable and the re-saved catalog must contain it."""
+        from repro.launch import serve as serve_launcher
+
+        ckpt = str(tmp_path / "cat")
+        extra_path = str(tmp_path / "extra.npy")
+        rng = np.random.default_rng(3)
+        np.save(extra_path, rng.integers(1, 5, 512).astype(np.int32))
+        serve_launcher.main([
+            "--kind", "dna", "--n", "2048", "--segments", "2",
+            "--batch", "4", "--batches", "2", "--ckpt-dir", ckpt,
+        ])
+        serve_launcher.main([
+            "--restore", "--ckpt-dir", ckpt, "--append", extra_path,
+            "--serve-async", "--batch", "4", "--batches", "2",
+            "--queue-depth", "128",
+        ])
+        reloaded = SegmentedIndex.load(ckpt)
+        assert reloaded.total_tokens == 2048 + 512
+        extra = np.load(extra_path)
+        want = count_naive(extra, extra[100:110])
+        got = reloaded.count(
+            np.asarray(extra[100:110], np.int32)[None, :]
+        )[0]
+        assert got >= want >= 1
