@@ -138,6 +138,17 @@ def main(argv=None) -> None:
     if bool(args.baseline) != bool(args.candidate):
         ap.error("--baseline and --candidate go together")
     if args.baseline:
+        # a bench whose baseline (or smoke output) does not exist yet is a
+        # legitimate state — e.g. a new benchmark with no committed
+        # artifact, or a CI lane that skipped the producing job.  Skip
+        # cleanly instead of failing as "unreadable JSON".
+        for role, path in (("baseline", args.baseline),
+                           ("candidate", args.candidate)):
+            if not os.path.exists(path):
+                print(f"check_bench_json: SKIP: {role} {path!r} does not "
+                      "exist yet (nothing to gate — commit/produce it to "
+                      "enable the regression gate)")
+                return
         compare(check_schema(args.baseline), check_schema(args.candidate),
                 args.tol)
         return

@@ -46,6 +46,11 @@ class BWTIndexConfig:
     serve_slo_p99_ms_locate: float = 200.0  # same, locate (LF-walk heavy)
     serve_parallel_segments: bool | None = None  # SegmentedIndex fan-out
                                       # (None = auto: stacked when >= 2)
+    # growth-op fault policy (frontend appends/compactions): transient
+    # failures retry with capped exponential backoff; a compaction that
+    # exhausts its retries is quarantined (pre-compact generation serves)
+    serve_growth_retries: int = 3
+    serve_growth_backoff_ms: float = 5.0
 
     # index lifecycle: ckpt_dir/ckpt_keep default launch.serve's --ckpt-dir/
     # --ckpt-keep flags (core/index_io.py checkpoints restore onto any mesh

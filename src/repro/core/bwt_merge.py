@@ -65,6 +65,7 @@ import numpy as np
 from jax import lax
 
 from ..kernels import ops
+from ..testing.faultinject import fault_point
 from .fm_index import (
     FMIndex,
     _next_pow2,
@@ -221,6 +222,10 @@ def merge_fm_indexes(
         right.row, right.bwt[right.row], jnp.asarray(nB, jnp.int32),
         sigma=sigma, bits=bits, r=r,
     ))[:nB].astype(np.int64)
+    # a crash here leaves the operands untouched and no merged index —
+    # callers (segments.compact, the frontend's growth retry) must recover
+    # by retrying or keeping the pre-merge generation serving
+    fault_point("merge.mid")
 
     # splice: right rows land at ins[k] + k, left rows fill the gaps in
     # order; then exchange the two wrap cells (each side's row of suffix 0

@@ -50,6 +50,31 @@ _SA_ARRAYS = ("sa_marks", "sa_mark_ranks", "sa_vals")
 _FM_LAYOUT = ("c_array", "occ_samples", "fused")
 
 
+class IndexIOError(Exception):
+    """Base for typed index checkpoint errors.  Every subclass also
+    derives from the stdlib exception a pre-typed caller would have seen
+    (``FileNotFoundError`` / ``ValueError``), so existing handlers keep
+    working while new callers can catch the whole family at once."""
+
+
+class MissingCheckpointError(IndexIOError, FileNotFoundError):
+    """No checkpoint where one was expected (empty dir, missing manifest
+    or arrays file).  Actionable: point at a directory ``save_index``
+    wrote, or rebuild and save the index."""
+
+
+class CorruptCheckpointError(IndexIOError, ValueError):
+    """The checkpoint exists but cannot be trusted: unreadable/truncated
+    arrays, a manifest that is not an index manifest, or arrays
+    inconsistent with the manifest.  Actionable: restore an earlier
+    ``step`` (``save_index`` keeps ``keep`` of them) or rebuild."""
+
+
+class UnsupportedVersionError(IndexIOError, ValueError):
+    """Checkpoint written by a newer format revision.  Actionable:
+    upgrade this build; the artifact itself is healthy."""
+
+
 def _manifest(fm, text_length: int) -> dict:
     kind = "dist_fm" if isinstance(fm, DistFMIndex) else "fm"
     return {
@@ -99,14 +124,54 @@ def save_index(directory: str, index, *, step: int = 0, keep: int = 3) -> int:
 
 def _check_manifest(meta: dict) -> None:
     if meta.get("format") != FORMAT:
-        raise ValueError(
+        raise CorruptCheckpointError(
             f"not an index checkpoint (format={meta.get('format')!r})"
         )
     if meta.get("version", 0) > VERSION:
-        raise ValueError(
+        raise UnsupportedVersionError(
             f"index checkpoint version {meta['version']} is newer than this "
-            f"build supports ({VERSION})"
+            f"build supports ({VERSION}); upgrade the reader — the artifact "
+            "itself is fine"
         )
+
+
+def _load_raw(directory: str, step: int | None):
+    """``Checkpointer.restore_raw`` with untyped filesystem/zip failures
+    mapped to the typed error family, plus array-vs-manifest validation
+    (missing leaves, truncated ``bwt``)."""
+    import zipfile
+
+    try:
+        flat, meta = Checkpointer(directory).restore_raw(step)
+    except FileNotFoundError as e:
+        raise MissingCheckpointError(
+            f"no readable index checkpoint under {directory!r}: {e}. "
+            "Expected a step directory with meta.json + arrays.npz "
+            "(written by save_index)."
+        ) from e
+    except (zipfile.BadZipFile, json.JSONDecodeError, OSError,
+            KeyError) as e:
+        raise CorruptCheckpointError(
+            f"index checkpoint under {directory!r} is unreadable ({e}); "
+            "restore an earlier step or rebuild the index"
+        ) from e
+    _check_manifest(meta)
+    declared = meta.get("arrays")
+    if declared:
+        missing = sorted(set(declared) - set(flat))
+        if missing:
+            raise CorruptCheckpointError(
+                f"index checkpoint under {directory!r} is missing arrays "
+                f"{missing} declared by its manifest; restore an earlier "
+                "step or rebuild the index"
+            )
+    if "bwt" in flat and flat["bwt"].shape[0] < meta.get("length", 0):
+        raise CorruptCheckpointError(
+            f"index checkpoint under {directory!r} has a truncated bwt "
+            f"({flat['bwt'].shape[0]} < manifest length {meta['length']}); "
+            "restore an earlier step or rebuild the index"
+        )
+    return flat, meta
 
 
 def restore_index(
@@ -122,8 +187,7 @@ def restore_index(
     new ``parts * sample_rate`` (pick a compatible mesh, or restore
     single-device).
     """
-    flat, meta = Checkpointer(directory).restore_raw(step)
-    _check_manifest(meta)
+    flat, meta = _load_raw(directory, step)
     sample_rate = meta["sample_rate"]
     sigma = meta["sigma"]
     srate = meta["sa_sample_rate"]
@@ -189,10 +253,22 @@ def describe_index(directory: str, step: int | None = None) -> IndexInfo:
     if step is None:
         step = Checkpointer(directory).latest_step()
         if step is None:
-            raise FileNotFoundError(f"no checkpoints under {directory}")
+            raise MissingCheckpointError(f"no checkpoints under {directory}")
     path = os.path.join(directory, f"step_{step:08d}", "meta.json")
-    with open(path) as f:
-        meta = json.load(f)
+    try:
+        with open(path) as f:
+            meta = json.load(f)
+    except FileNotFoundError as e:
+        raise MissingCheckpointError(
+            f"checkpoint step {step} under {directory!r} has no manifest "
+            f"({path} is missing) — the save was torn; restore an earlier "
+            "step or re-save"
+        ) from e
+    except (OSError, json.JSONDecodeError) as e:
+        raise CorruptCheckpointError(
+            f"manifest {path!r} is unreadable ({e}); restore an earlier "
+            "step or rebuild"
+        ) from e
     _check_manifest(meta)
     return IndexInfo(
         meta["kind"], step, meta["sigma"], meta["length"],

@@ -45,13 +45,20 @@ the global alphabet can never match padding (see
 from __future__ import annotations
 
 import dataclasses
+import io
 import json
 import os
-import shutil
 
 import numpy as np
 
 from .bwt_merge import merge_eligible, merge_fm_indexes
+from .journal import (
+    GenerationJournal,
+    fsync_path,
+    manifest_entry,
+    verify_file,
+    write_file_durable,
+)
 from .dist_suffix_array import DistSAConfig
 from .fm_index import (
     StackedFMIndex,
@@ -150,6 +157,11 @@ class SegmentedIndex:
         self.segments: list[Segment] = []
         self._next_id = 0
         self._stacked_cache: object | None = None
+        # segments load() withdrew from serving (checksum/restore failures):
+        # catalog entries + reason.  A degraded catalog keeps serving the
+        # healthy segments; quarantined global coordinates answer nothing.
+        self.quarantined: list[dict] = []
+        self._next_offset = 0  # first free global coordinate (survives holes)
 
     @classmethod
     def from_config(cls, sigma: int, cfg) -> "SegmentedIndex":
@@ -177,6 +189,19 @@ class SegmentedIndex:
     def total_tokens(self) -> int:
         return sum(s.n_tokens for s in self.segments)
 
+    @property
+    def degraded(self) -> bool:
+        """True when load() quarantined corrupt segments: the catalog
+        serves, but a known slice of the corpus is missing."""
+        return bool(self.quarantined)
+
+    @property
+    def coord_end(self) -> int:
+        """One past the largest assigned global coordinate.  Equal to
+        ``total_tokens`` except in a degraded catalog, where quarantined
+        segments leave holes that new appends must not reuse."""
+        return max(self.total_tokens, self._next_offset)
+
     def _build(self, tokens: np.ndarray) -> SequenceIndex:
         return build_index(
             tokens, sample_rate=self.sample_rate,
@@ -201,8 +226,9 @@ class SegmentedIndex:
             raise ValueError(
                 f"tokens out of declared alphabet [1, {self.sigma})"
             )
-        seg = Segment(self._next_id, self.total_tokens, len(tokens),
+        seg = Segment(self._next_id, self.coord_end, len(tokens),
                       self._build(tokens), tokens)
+        self._next_offset = seg.offset + seg.n_tokens
         self._next_id += 1
         self.segments.append(seg)
         if isinstance(self._stacked_cache, StackedFMIndex):
@@ -460,7 +486,7 @@ class SegmentedIndex:
     def locate(self, patterns, k: int):
         """First-k *global* occurrence positions per pattern.
 
-        Returns (positions int64[B, k] sorted ascending, ``total_tokens``
+        Returns (positions int64[B, k] sorted ascending, ``coord_end``
         filling unused slots; counts int64[B] clipped to k).  The k kept
         positions are the k smallest global positions among per-segment
         candidates (each segment contributes its first k in SA order — the
@@ -485,7 +511,7 @@ class SegmentedIndex:
                 for seg in self.segments
             )
         B = patterns.shape[0]
-        fill = self.total_tokens
+        fill = self.coord_end
         cand = [np.full((B, 1), fill, np.int64)]
         counts = np.zeros(B, np.int64)
         for seg, (pos, cnt) in zip(self.segments, per_seg):
@@ -510,32 +536,8 @@ class SegmentedIndex:
             for s in self.segments
         ]
 
-    def save(self, directory: str) -> None:
-        """Persist catalog + every segment (index checkpoint AND raw tokens,
-        so a restored catalog can keep compacting).
-
-        Incremental: segments are immutable and ids never reused, so a
-        segment directory that already exists is skipped, and directories
-        orphaned by ``compact`` (no longer in the catalog) are deleted —
-        repeated append/compact/save cycles cost O(new segments) IO and the
-        directory tracks the live catalog exactly.
-        """
-        from .index_io import save_index
-
-        os.makedirs(directory, exist_ok=True)
-        live = set()
-        for seg in self.segments:
-            name = f"seg_{seg.seg_id:06d}"
-            live.add(name)
-            seg_dir = os.path.join(directory, name)
-            if os.path.exists(os.path.join(seg_dir, "tokens.npz")):
-                continue  # immutable + id-unique -> already persisted
-            save_index(seg_dir, seg.index)
-            np.savez(os.path.join(seg_dir, "tokens.npz"), tokens=seg.tokens)
-        for name in os.listdir(directory):
-            if name.startswith("seg_") and name not in live:
-                shutil.rmtree(os.path.join(directory, name))
-        cat = {
+    def _catalog_payload(self) -> dict:
+        return {
             "format": CATALOG_FORMAT, "version": CATALOG_VERSION,
             "sigma": self.sigma, "sample_rate": self.sample_rate,
             "sa_sample_rate": self.sa_sample_rate,
@@ -545,26 +547,98 @@ class SegmentedIndex:
             "compact_strategy": self.compact_strategy,
             "compact_trigger_ratio": self.compact_trigger_ratio,
             "sa_config": self.sa_config._asdict(),
-            "next_id": self._next_id, "segments": self.catalog(),
+            "next_id": self._next_id, "next_offset": self.coord_end,
+            "segments": self.catalog(),
         }
-        tmp = os.path.join(directory, "catalog.json.tmp")
-        with open(tmp, "w") as f:
-            json.dump(cat, f, indent=2)
-        os.replace(tmp, os.path.join(directory, "catalog.json"))
+
+    @staticmethod
+    def _seg_relpaths(directory: str, name: str) -> list[str]:
+        """Every file of one segment directory, as "/"-joined relpaths."""
+        out = []
+        for root, _, names in os.walk(os.path.join(directory, name)):
+            for fn in names:
+                rel = os.path.relpath(os.path.join(root, fn), directory)
+                out.append(rel.replace(os.sep, "/"))
+        return sorted(out)
+
+    def save(self, directory: str) -> None:
+        """Persist catalog + every segment as one crash-safe **generation
+        commit** (see ``core.journal``).
+
+        Incremental: segments are immutable and ids never reused, so a
+        segment directory that already exists is skipped (its checksums are
+        carried over from the previous committed generation), and
+        directories orphaned by ``compact`` are garbage-collected only
+        *after* the new generation's pointer flip — a crash at any point
+        of the save leaves the previous generation fully loadable, with
+        recovery sweeping any staged debris on the next load.
+        """
+        from .index_io import save_index
+
+        os.makedirs(directory, exist_ok=True)
+        journal = GenerationJournal(directory)
+        prev = journal.committed()
+        prev_files = prev["files"] if prev else {}
+
+        # phase 1 — stage: write + fsync every new artifact; nothing the
+        # committed generation references is touched
+        files: dict[str, dict] = {}
+        for seg in self.segments:
+            name = f"seg_{seg.seg_id:06d}"
+            seg_dir = os.path.join(directory, name)
+            fresh = not os.path.exists(os.path.join(seg_dir, "tokens.npz"))
+            if fresh:
+                save_index(seg_dir, seg.index)
+                buf = io.BytesIO()
+                np.savez(buf, tokens=seg.tokens)
+                write_file_durable(os.path.join(seg_dir, "tokens.npz"),
+                                   buf.getvalue())
+            for rel in self._seg_relpaths(directory, name):
+                if not fresh and rel in prev_files:
+                    files[rel] = prev_files[rel]  # immutable: CRC carries
+                else:
+                    if fresh and not rel.endswith("tokens.npz"):
+                        fsync_path(os.path.join(directory, rel))
+                    files[rel] = manifest_entry(directory, rel)
+
+        # phase 2 — commit: durable generation manifest, atomic pointer
+        journal.commit(self._catalog_payload(), files)
+
+        # post-commit: legacy-readable mirror + garbage collection of
+        # orphaned segments, older generations, and staging debris
+        write_file_durable(
+            os.path.join(directory, "catalog.json"),
+            json.dumps(self._catalog_payload(), indent=2).encode(),
+        )
+        journal.collect_garbage(files)
 
     @classmethod
     def load(cls, directory: str, **kwargs) -> "SegmentedIndex":
         """Restore a saved segmented index (single-device segments).
 
-        Build knobs (sample_rate, pack, compress_sa, sa_config, ...) come
-        back from the catalog, so future appends/compactions build segments
-        exactly like the saved ones; ``kwargs`` override any of them.
-        Existing segments restore bit-identically via ``index_io``.
+        Reads the **committed generation** (journal pointer; a torn save is
+        rolled back to the last committed one and its staged debris swept),
+        verifies every artifact's CRC32 against the generation manifest,
+        and restores the healthy segments bit-identically via ``index_io``.
+        A segment that fails verification or restore is **quarantined**
+        (moved under ``quarantine/``, listed in ``self.quarantined``)
+        instead of failing the load: the catalog comes up degraded but
+        serving.  Build knobs come back from the catalog so future appends
+        build segments exactly like the saved ones; ``kwargs`` override
+        any of them.  Pre-journal directories (bare ``catalog.json``) load
+        unverified, as before.
         """
-        from .index_io import restore_index
+        from .index_io import IndexIOError, restore_index
 
-        with open(os.path.join(directory, "catalog.json")) as f:
-            cat = json.load(f)
+        journal = GenerationJournal(directory)
+        man = journal.committed()
+        if man is not None:
+            cat, files = man["catalog"], man["files"]
+            journal.collect_garbage(files)  # recovery: sweep torn saves
+        else:  # legacy layout: unverified catalog.json
+            with open(os.path.join(directory, "catalog.json")) as f:
+                cat = json.load(f)
+            files = None
         if cat.get("format") != CATALOG_FORMAT:
             raise ValueError(f"not a segment catalog: {directory}")
         if cat.get("version", 0) > CATALOG_VERSION:
@@ -588,14 +662,38 @@ class SegmentedIndex:
         self = cls(cat["sigma"], **knobs)
         self._next_id = cat["next_id"]
         for ent in cat["segments"]:
-            seg_dir = os.path.join(directory, f"seg_{ent['seg_id']:06d}")
-            index = restore_index(seg_dir)
-            with np.load(os.path.join(seg_dir, "tokens.npz")) as z:
-                tokens = z["tokens"]
-            assert len(tokens) == ent["n_tokens"], seg_dir
+            name = f"seg_{ent['seg_id']:06d}"
+            seg_dir = os.path.join(directory, name)
+            reason = None
+            if files is not None:
+                rels = [r for r in files if r.startswith(name + "/")]
+                if not rels:
+                    reason = "no files recorded in the generation manifest"
+                for rel in rels:
+                    err = verify_file(directory, rel, files[rel])
+                    if err:
+                        reason = f"{rel}: {err}"
+                        break
+            if reason is None:
+                try:
+                    index = restore_index(seg_dir)
+                    with np.load(os.path.join(seg_dir, "tokens.npz")) as z:
+                        tokens = z["tokens"]
+                    if len(tokens) != ent["n_tokens"]:
+                        reason = (f"tokens.npz holds {len(tokens)} tokens, "
+                                  f"catalog says {ent['n_tokens']}")
+                except (IndexIOError, OSError, KeyError, ValueError) as e:
+                    reason = f"restore failed: {e}"
+            if reason is not None:
+                journal.quarantine(name)
+                self.quarantined.append({**ent, "reason": reason})
+                continue
             self.segments.append(Segment(
                 ent["seg_id"], ent["offset"], ent["n_tokens"], index,
                 tokens, tuple(tuple(d) for d in ent.get("docs", []))
                 or ((ent["n_tokens"], 0),),
             ))
+        ends = [e["offset"] + e["n_tokens"]
+                for e in cat["segments"]] + [cat.get("next_offset", 0)]
+        self._next_offset = max(ends, default=0)
         return self

@@ -72,10 +72,23 @@ def main(argv=None):
                     help="per-bucket p99 latency target for locate queries")
     ap.add_argument("--locate-frac", type=float, default=0.2,
                     help="fraction of async requests issued as locate")
+    ap.add_argument("--fault-schedule", default=None, metavar="SPEC",
+                    help="arm deterministic fault injection for this run: "
+                         "comma-separated failpoint triggers like "
+                         "'io.write:0,merge.mid:1' (repro.testing."
+                         "faultinject).  The run then exercises the "
+                         "recovery paths instead of the happy path; a "
+                         "fault report prints on exit")
     args = ap.parse_args(argv)
     if args.segments > args.n:
         ap.error(f"--segments {args.segments} exceeds --n {args.n} "
                  "(every segment needs at least one token)")
+
+    from ..testing import faultinject
+
+    if args.fault_schedule:
+        faultinject.arm(faultinject.FaultSchedule.parse(args.fault_schedule))
+        print(f"fault schedule armed: {args.fault_schedule}")
 
     from ..core.dist_suffix_array import DistSAConfig
     from ..core.fm_index import PAD
@@ -108,6 +121,13 @@ def main(argv=None):
         t0 = time.time()
         if catalog_json and os.path.exists(catalog_json):
             index = SegmentedIndex.load(args.ckpt_dir)
+            if index.degraded:
+                for q in index.quarantined:
+                    print(f"WARNING: segment {q['seg_id']} quarantined "
+                          f"({q['reason']}); serving degraded")
+            if not index.segments:
+                ap.error(f"catalog under {args.ckpt_dir} has no healthy "
+                         "segments left to serve")
             toks = np.concatenate([s.tokens for s in index.segments])
             args.n = len(toks)
             print(
@@ -237,6 +257,8 @@ def main(argv=None):
             f"async-serve: {m['completed']} answered "
             f"({shed} shed) at {m['qps']:.0f} qps, total_hits={hits}"
         )
+        if faultinject.active() is not None:
+            print(f"fault report: {faultinject.active().report()}")
         return
 
     lats = []
@@ -256,6 +278,8 @@ def main(argv=None):
         f"p50={lats[len(lats) // 2] * 1e3:.1f}ms "
         f"p99={lats[-1] * 1e3:.1f}ms  total_hits={total}"
     )
+    if faultinject.active() is not None:
+        print(f"fault report: {faultinject.active().report()}")
 
 
 if __name__ == "__main__":

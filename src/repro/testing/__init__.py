@@ -1,0 +1,2 @@
+"""Test-support utilities shipped with the library (deterministic fault
+injection for crash-recovery testing; see ``repro.testing.faultinject``)."""

@@ -32,6 +32,8 @@ from typing import Any
 import jax
 import numpy as np
 
+from ..testing.faultinject import fault_point
+
 _SEP = "/"
 
 
@@ -103,11 +105,14 @@ class Checkpointer:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
+        fault_point("io.write")
         np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        fault_point("io.write")
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump({"step": step, **extra}, f)
         if os.path.exists(final):
             shutil.rmtree(final)
+        fault_point("io.rename")
         os.rename(tmp, final)
         self._gc()
 

@@ -517,8 +517,74 @@ def scenario_seg_merge():
     print("seg_merge parity ok")
 
 
+def scenario_crash_save():
+    """Durability under multi-device builds: a segmented catalog built with
+    forced host devices present crashes mid-save (injected ``io.write``
+    fault), reloads to the last committed generation bit-identically, and
+    a clean re-save then commits the new state — same answers, no orphans.
+    Honors REPRO_FAULT_SCHEDULE when set (the CI lane passes io.write:3)."""
+    import tempfile
+
+    from repro.core.fm_index import PAD
+    from repro.core.journal import GenerationJournal
+    from repro.core.segments import SegmentedIndex
+    from repro.testing import faultinject
+
+    assert len(jax.devices()) == DEVICES
+    rng = np.random.default_rng(53)
+    sigma = 5
+    seg = SegmentedIndex(sigma, sample_rate=8, sa_sample_rate=4)
+    chunks = [rng.integers(1, sigma, n).astype(np.int32)
+              for n in (4 * DEVICES, 21, 40)]
+    for c in chunks[:2]:
+        seg.append(c)
+    full = np.concatenate(chunks[:2])
+    B, L = 8, 5
+    pats = np.full((B, L), PAD, np.int32)
+    for b in range(B):
+        m = int(rng.integers(1, L + 1))
+        st = int(rng.integers(0, len(full) - m))
+        pats[b, :m] = full[st : st + m]
+    want_c = seg.count(pats)
+
+    with tempfile.TemporaryDirectory() as d:
+        seg.save(d)  # generation 0, committed clean
+        seg.append(chunks[2])
+        schedule = (faultinject.arm_from_env()
+                    or faultinject.arm(
+                        faultinject.FaultSchedule.parse("io.write:3")))
+        try:
+            seg.save(d)  # crashes mid-stage of generation 1
+            raise AssertionError("fault schedule never fired")
+        except faultinject.InjectedFault:
+            pass
+        finally:
+            faultinject.arm(None)
+        back = SegmentedIndex.load(d)
+        man = GenerationJournal(d).committed()
+        assert man["generation"] == 0, "torn save must not commit"
+        assert not back.degraded, back.quarantined
+        assert back.total_tokens == len(full)
+        assert np.array_equal(back.count(pats), want_c), "answers changed"
+        # recovery swept the staged debris: exactly the committed files
+        on_disk = {os.path.relpath(os.path.join(r, f), d).replace(os.sep, "/")
+                   for r, _, fs in os.walk(d) for f in fs}
+        expected = set(man["files"]) | {
+            "CURRENT", "catalog.json", f"gen_{man['generation']:08d}.json"
+        }
+        assert on_disk == expected, on_disk ^ expected
+        # the retried save commits generation 1 with the appended text
+        seg.save(d)
+        again = SegmentedIndex.load(d)
+        assert GenerationJournal(d).committed()["generation"] == 1
+        assert again.total_tokens == len(np.concatenate(chunks))
+        assert np.array_equal(again.count(pats), seg.count(pats))
+    print("crash_save recovery ok")
+
+
 SCENARIOS = {
     "pipeline": scenario_pipeline,
+    "crash_save": scenario_crash_save,
     "seg_merge": scenario_seg_merge,
     "index_io": scenario_index_io,
     "elastic": scenario_elastic,

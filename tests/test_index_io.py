@@ -22,6 +22,10 @@ from repro.core.fm_index import (
     unpack_sa_value,
 )
 from repro.core.index_io import (
+    CorruptCheckpointError,
+    IndexIOError,
+    MissingCheckpointError,
+    UnsupportedVersionError,
     describe_index,
     latest_index_step,
     restore_index,
@@ -167,6 +171,89 @@ class TestManifest:
             restore_index(str(missing))
         assert latest_index_step(str(missing)) is None
         assert not missing.exists()
+
+
+class TestTypedErrors:
+    """Every restore failure mode raises a typed, actionable IndexIOError
+    subclass that ALSO derives from the stdlib exception older callers
+    caught (FileNotFoundError / ValueError)."""
+
+    @pytest.fixture()
+    def saved(self, tmp_path):
+        rng = np.random.default_rng(9)
+        toks = rng.integers(1, 5, 300).astype(np.int32)
+        idx = build_index(toks, sample_rate=16, sa_sample_rate=8)
+        save_index(str(tmp_path), idx)
+        return tmp_path
+
+    def test_empty_dir_is_missing(self, tmp_path):
+        with pytest.raises(MissingCheckpointError) as ei:
+            restore_index(str(tmp_path))
+        assert isinstance(ei.value, FileNotFoundError)
+        assert "save_index" in str(ei.value)  # actionable: how to make one
+
+    def test_missing_manifest(self, saved):
+        (saved / "step_00000000" / "meta.json").unlink()
+        with pytest.raises(MissingCheckpointError):
+            restore_index(str(saved))
+        with pytest.raises(MissingCheckpointError, match="torn"):
+            describe_index(str(saved))
+
+    def test_version_from_the_future_is_typed(self, saved):
+        import json
+        meta_path = saved / "step_00000000" / "meta.json"
+        meta = json.loads(meta_path.read_text())
+        meta["version"] = 999
+        meta_path.write_text(json.dumps(meta))
+        with pytest.raises(UnsupportedVersionError, match="newer") as ei:
+            restore_index(str(saved))
+        assert isinstance(ei.value, (IndexIOError, ValueError))
+        with pytest.raises(UnsupportedVersionError):
+            describe_index(str(saved))
+
+    def test_truncated_arrays_file(self, saved):
+        """A torn arrays.npz (half the bytes) is corruption, not a crash
+        with a zipfile traceback."""
+        path = saved / "step_00000000" / "arrays.npz"
+        blob = path.read_bytes()
+        path.write_bytes(blob[: len(blob) // 2])
+        with pytest.raises(CorruptCheckpointError, match="unreadable") as ei:
+            restore_index(str(saved))
+        assert isinstance(ei.value, ValueError)
+
+    def test_missing_declared_array(self, saved):
+        """arrays.npz missing a leaf the manifest declares -> corrupt, with
+        the missing names listed."""
+        path = saved / "step_00000000" / "arrays.npz"
+        with np.load(str(path)) as z:
+            flat = {k: z[k] for k in z.files if k != "row"}
+        np.savez(str(path), **flat)
+        with pytest.raises(CorruptCheckpointError, match="row"):
+            restore_index(str(saved))
+
+    def test_truncated_bwt_array(self, saved):
+        """A bwt shorter than the manifest's length -> corrupt (truncated),
+        caught before any index math runs."""
+        path = saved / "step_00000000" / "arrays.npz"
+        with np.load(str(path)) as z:
+            flat = {k: z[k] for k in z.files}
+        flat["bwt"] = flat["bwt"][: len(flat["bwt"]) // 2]
+        np.savez(str(path), **flat)
+        with pytest.raises(CorruptCheckpointError, match="truncated"):
+            restore_index(str(saved))
+
+    def test_unreadable_manifest_json(self, saved):
+        (saved / "step_00000000" / "meta.json").write_text("{not json")
+        with pytest.raises(CorruptCheckpointError):
+            restore_index(str(saved))
+        with pytest.raises(CorruptCheckpointError, match="unreadable"):
+            describe_index(str(saved))
+
+    def test_family_catch_all(self, saved):
+        """One except clause covers the whole family."""
+        (saved / "step_00000000" / "meta.json").unlink()
+        with pytest.raises(IndexIOError):
+            restore_index(str(saved))
 
 
 class TestCompressedSAValues:

@@ -16,11 +16,17 @@ layouts (reserve off lets the effective alphabet vary per segment, which
 exercises the rebuild fallback on mixed catalogs).
 """
 
+import os
+import shutil
+
 import numpy as np
 import pytest
 
 from repro.core.fm_index import PAD, fm_mismatch
+from repro.core.journal import CURRENT, GEN_FMT, GenerationJournal
 from repro.core.segments import SegmentedIndex
+from repro.testing import faultinject
+from repro.testing.faultinject import FaultSchedule, InjectedFault
 
 SAMPLE_RATE = 8
 SA_SAMPLE_RATE = 4
@@ -173,6 +179,244 @@ def test_lifecycle_fuzz(sigma, reserve_pad, tmp_path):
     loaded = SegmentedIndex.load(save_dir)
     assert loaded.catalog() == seg.catalog()
     check_answers(loaded, oracle, rng, sigma, (sigma, reserve_pad, "final"))
+
+
+def _files_on_disk(directory):
+    return {
+        os.path.relpath(os.path.join(root, f), directory).replace(os.sep, "/")
+        for root, dirs, fs in os.walk(directory)
+        if "quarantine" not in root.split(os.sep)
+        for f in fs
+    }
+
+
+def _assert_no_orphans(directory, manifest):
+    """The directory holds EXACTLY the committed generation's artifacts
+    plus the journal bookkeeping — no staged debris, nothing missing."""
+    expected = set(manifest["files"]) | {
+        CURRENT, "catalog.json", GEN_FMT.format(manifest["generation"]),
+    }
+    got = _files_on_disk(directory)
+    assert got == expected, ("orphans/missing", got ^ expected)
+
+
+class TestCrashRecovery:
+    """Crash-at-every-failpoint sweep over a catalog save: the reopened
+    catalog must answer bit-for-bit as EITHER the pre-save or the post-save
+    committed generation (atomicity — never a blend), with zero orphaned
+    files after recovery."""
+
+    SIGMA = 4
+
+    @pytest.fixture(scope="class")
+    def crash_state(self, tmp_path_factory):
+        """(seg, base_dir, oracle_pre, oracle_post): ``base_dir`` holds
+        committed generation 0 (two documents); ``seg`` carries a third
+        appended document plus a compaction that generation 1 would
+        commit."""
+        tmp = tmp_path_factory.mktemp("crash")
+        rng = np.random.default_rng(99)
+        seg = SegmentedIndex(self.SIGMA, sample_rate=SAMPLE_RATE,
+                             sa_sample_rate=SA_SAMPLE_RATE,
+                             segment_min_tokens=256)
+        pre, post = DocOracle(), DocOracle()
+        docs = [rng.integers(1, self.SIGMA, m).astype(np.int32)
+                for m in (21, 13, 34)]
+        for d in docs[:2]:
+            seg.append(d)
+            pre.append(d)
+            post.append(d)
+        base = str(tmp / "base")
+        seg.save(base)
+        assert GenerationJournal(base).committed()["generation"] == 0
+        # generation 1 will drop both old segments for one merged segment
+        seg.append(docs[2])
+        post.append(docs[2])
+        assert seg.compact(min_tokens=None) == 1
+        return seg, base, pre, post
+
+    def test_crash_at_every_failpoint_recovers(self, crash_state, tmp_path):
+        seg, base, pre, post = crash_state
+        rng = np.random.default_rng(7)
+
+        # discovery pass: a record-only schedule counts how many times each
+        # failpoint fires during this exact save, so the sweep is exhaustive
+        scratch = str(tmp_path / "scratch")
+        shutil.copytree(base, scratch)
+        with faultinject.inject(FaultSchedule()) as rec:
+            seg.save(scratch)
+        hits = dict(rec.hits)
+        assert set(hits) >= {"io.write", "io.fsync", "io.rename"}, hits
+
+        gens_seen = set()
+        for name in sorted(hits):
+            for k in range(hits[name]):
+                ctx = (name, k)
+                trial = str(tmp_path / f"t_{name.replace('.', '_')}_{k}")
+                shutil.copytree(base, trial)
+                with faultinject.inject(FaultSchedule([(name, k)])):
+                    with pytest.raises(InjectedFault):
+                        seg.save(trial)
+                back = SegmentedIndex.load(trial)
+                man = GenerationJournal(trial).committed()
+                assert not back.degraded, (ctx, back.quarantined)
+                if man["generation"] == 0:  # crash before the pointer flip
+                    assert back.total_tokens == pre.total, ctx
+                    check_answers(back, pre, rng, self.SIGMA, ctx)
+                else:  # crash after commit (e.g. in the legacy mirror)
+                    assert man["generation"] == 1, ctx
+                    assert back.total_tokens == post.total, ctx
+                    assert len(back.segments) == 1, ctx
+                    check_answers(back, post, rng, self.SIGMA, ctx)
+                gens_seen.add(man["generation"])
+                _assert_no_orphans(trial, man)
+        # the sweep must cover both sides of the commit point
+        assert gens_seen == {0, 1}, gens_seen
+
+    def test_crashed_save_retries_to_a_clean_commit(self, crash_state,
+                                                    tmp_path):
+        seg, base, _, post = crash_state
+        rng = np.random.default_rng(8)
+        trial = str(tmp_path / "retry")
+        shutil.copytree(base, trial)
+        with faultinject.inject(FaultSchedule([("io.rename", 0)])):
+            with pytest.raises(InjectedFault):
+                seg.save(trial)
+        seg.save(trial)  # the retry must fully commit generation 1
+        man = GenerationJournal(trial).committed()
+        assert man["generation"] == 1
+        back = SegmentedIndex.load(trial)
+        assert back.total_tokens == post.total and not back.degraded
+        check_answers(back, post, rng, self.SIGMA, "retry")
+        _assert_no_orphans(trial, man)
+
+    def test_first_save_crash_then_retry(self, tmp_path):
+        """A crash during the very FIRST save leaves no committed
+        generation (nothing to roll back to); the retried save succeeds."""
+        rng = np.random.default_rng(5)
+        seg = SegmentedIndex(self.SIGMA, sample_rate=SAMPLE_RATE,
+                             sa_sample_rate=SA_SAMPLE_RATE)
+        seg.append(rng.integers(1, self.SIGMA, 21).astype(np.int32))
+        d = str(tmp_path / "cat")
+        with faultinject.inject(FaultSchedule([("io.write", 0)])):
+            with pytest.raises(InjectedFault):
+                seg.save(d)
+        assert GenerationJournal(d).committed() is None
+        seg.save(d)
+        back = SegmentedIndex.load(d)
+        assert back.total_tokens == seg.total_tokens
+        assert not back.degraded
+
+    def test_merge_crash_leaves_operands_serving(self, tmp_path):
+        """A crash mid BWT-merge (``merge.mid``) must leave the operand
+        segments untouched and answering; the retried compact succeeds
+        with invariant answers."""
+        rng = np.random.default_rng(6)
+        seg = SegmentedIndex(self.SIGMA, sample_rate=SAMPLE_RATE,
+                             sa_sample_rate=SA_SAMPLE_RATE)
+        oracle = DocOracle()
+        for m in (21, 13):
+            d = rng.integers(1, self.SIGMA, m).astype(np.int32)
+            seg.append(d)
+            oracle.append(d)
+        ids_before = [s.seg_id for s in seg.segments]
+        with faultinject.inject(FaultSchedule([("merge.mid", 0)])):
+            with pytest.raises(InjectedFault):
+                seg.compact(min_tokens=None)
+        assert [s.seg_id for s in seg.segments] == ids_before
+        check_answers(seg, oracle, rng, self.SIGMA, "post-crash")
+        assert seg.compact(min_tokens=None) == 1
+        check_answers(seg, oracle, rng, self.SIGMA, "post-retry")
+
+
+class TestQuarantine:
+    """Corrupt artifacts are withdrawn from serving, not fatal: the catalog
+    comes up degraded, healthy segments keep answering, and appends never
+    reuse a quarantined segment's global coordinates."""
+
+    SIGMA = 4
+
+    def _saved(self, tmp_path, rng):
+        seg = SegmentedIndex(self.SIGMA, sample_rate=SAMPLE_RATE,
+                             sa_sample_rate=SA_SAMPLE_RATE)
+        docs = [rng.integers(1, self.SIGMA, m).astype(np.int32)
+                for m in (21, 34)]
+        for d in docs:
+            seg.append(d)
+        directory = str(tmp_path / "cat")
+        seg.save(directory)
+        return seg, docs, directory
+
+    def test_bitrot_quarantined_and_serving_degrades(self, tmp_path):
+        rng = np.random.default_rng(31)
+        seg, docs, directory = self._saved(tmp_path, rng)
+        # flip one byte of the second segment's tokens (size unchanged:
+        # only the CRC32 in the generation manifest can catch it)
+        victim = os.path.join(directory, "seg_000001", "tokens.npz")
+        blob = bytearray(open(victim, "rb").read())
+        blob[len(blob) // 2] ^= 0xFF
+        with open(victim, "wb") as f:
+            f.write(bytes(blob))
+
+        back = SegmentedIndex.load(directory)
+        assert back.degraded
+        assert [q["seg_id"] for q in back.quarantined] == [1]
+        assert "crc32" in back.quarantined[0]["reason"]
+        assert len(back.segments) == 1
+        # forensics: the corrupt artifact moved under quarantine/, and the
+        # healthy part of the catalog has no orphans around it
+        qdir = os.path.join(directory, "quarantine")
+        assert os.path.isdir(qdir) and os.listdir(qdir)
+
+        # the healthy document still answers exactly
+        pat = docs[0][3:8][None, :].astype(np.int32)
+        want = np.count_nonzero([
+            np.array_equal(docs[0][i:i + 5], docs[0][3:8])
+            for i in range(len(docs[0]) - 4)
+        ])
+        assert back.count(pat)[0] == want
+        # quarantined coordinates leave a hole: locate's fill sentinel and
+        # new appends both sit past it
+        assert back.coord_end == len(docs[0]) + len(docs[1])
+        pos, _ = back.locate(pat, 4)
+        assert pos.max() <= back.coord_end
+        new = rng.integers(1, self.SIGMA, 13).astype(np.int32)
+        appended = back.append(new)
+        assert appended.offset == len(docs[0]) + len(docs[1])
+
+    def test_injected_checksum_fault_quarantines(self, tmp_path):
+        """The ``restore.checksum`` failpoint simulates a torn read during
+        verification: the affected segment quarantines, the rest serve."""
+        rng = np.random.default_rng(32)
+        seg, docs, directory = self._saved(tmp_path, rng)
+        with faultinject.inject(FaultSchedule([("restore.checksum", 0)])):
+            back = SegmentedIndex.load(directory)
+        assert back.degraded and len(back.quarantined) == 1
+        assert "injected" in back.quarantined[0]["reason"]
+        assert len(back.segments) == 1
+        # quarantine is conservative: the implicated artifacts were MOVED
+        # under quarantine/, so a later reload sees them as missing and the
+        # catalog stays degraded — same healthy set, stable reason
+        fresh = SegmentedIndex.load(directory)
+        healthy = back.segments[0].seg_id
+        assert [s.seg_id for s in fresh.segments] == [healthy]
+        assert fresh.degraded and "missing" in fresh.quarantined[0]["reason"]
+
+    def test_degraded_catalog_roundtrips_through_save(self, tmp_path):
+        """Saving a degraded catalog commits only the healthy segments (the
+        hole persists in coordinates), and reloads non-degraded."""
+        rng = np.random.default_rng(33)
+        seg, docs, directory = self._saved(tmp_path, rng)
+        with faultinject.inject(FaultSchedule([("restore.checksum", 0)])):
+            back = SegmentedIndex.load(directory)
+        assert back.degraded
+        end = back.coord_end
+        out = str(tmp_path / "resaved")
+        back.save(out)
+        again = SegmentedIndex.load(out)
+        assert not again.degraded
+        assert again.total_tokens == back.total_tokens
+        assert again.coord_end == end  # the hole survives the round-trip
 
 
 def test_fuzz_compaction_of_compactions():

@@ -13,7 +13,13 @@ from repro.core.fm_index import PAD, count_naive
 from repro.core.pipeline import build_index
 from repro.core.segments import SegmentedIndex
 from repro.serving.engine import FMQueryServer
-from repro.serving.frontend import AsyncQueryFrontend, Rejected
+from repro.serving.frontend import (
+    AsyncQueryFrontend,
+    DeadlineExceeded,
+    Rejected,
+)
+from repro.testing import faultinject
+from repro.testing.faultinject import FaultSchedule, InjectedFault
 
 SIGMA = 5  # dna-like: tokens 1..4
 
@@ -214,6 +220,163 @@ class TestFrontend:
             assert all(f.result(timeout=120).count == want for f in futs)
             m = fe.metrics()
         assert m["flushes"] < m["completed"]
+
+
+class TestFrontendFaults:
+    """The self-healing layer: worker watchdog, per-query deadlines,
+    growth-op retries, poison-op quarantine, and the close() guarantee
+    that admitted futures always resolve."""
+
+    def test_worker_crash_restarts_and_fails_only_inflight(self, built):
+        """An injected ``worker.flush`` crash kills the worker thread; the
+        watchdog fails that flush's futures with the crash exception,
+        respawns a worker, and everything else answers exactly."""
+        rng, toks, index = built
+        expect = {}
+        with faultinject.inject(FaultSchedule([("worker.flush", 0)])):
+            with AsyncQueryFrontend(_server(index), max_queue=256,
+                                    max_wait_ms=5.0) as fe:
+                futs = []
+                for i in range(30):
+                    L = int(rng.integers(2, 9))
+                    st = int(rng.integers(0, len(toks) - L))
+                    expect[i] = count_naive(toks, toks[st : st + L])
+                    futs.append(fe.submit(toks[st : st + L]))
+                crashed = answered = 0
+                for i, f in enumerate(futs):
+                    try:
+                        r = f.result(timeout=120)
+                    except InjectedFault:
+                        crashed += 1
+                        continue
+                    assert r.count == expect[i], i
+                    answered += 1
+                m = fe.metrics()
+        assert crashed >= 1, "the injected crash hit no flush"
+        assert answered == 30 - crashed
+        assert m["worker_restarts"] == 1
+        assert m["completed"] == answered
+
+    def test_deadline_exceeded_resolves_instead_of_waiting(self, built):
+        """A queued request whose deadline passes before its flush
+        dispatches resolves to DeadlineExceeded — never hangs."""
+        _, toks, index = built
+        fe = AsyncQueryFrontend(_server(index), max_queue=16,
+                                autostart=False)
+        doomed = fe.submit(toks[:4], deadline_ms=0.0)
+        alive = fe.submit(toks[:4], deadline_ms=60_000.0)
+        time.sleep(0.005)  # let the zero deadline lapse while queued
+        fe.start()
+        assert isinstance(doomed.result(timeout=120), DeadlineExceeded)
+        assert doomed.result().kind == "count"
+        assert alive.result(timeout=120).count == count_naive(toks, toks[:4])
+        fe.stop()
+        m = fe.metrics()
+        assert m["deadline_exceeded"] == 1 and m["completed"] == 1
+
+    def test_negative_deadline_rejected_at_submit(self, built):
+        _, toks, index = built
+        fe = AsyncQueryFrontend(_server(index), max_queue=4, autostart=False)
+        with pytest.raises(ValueError, match="deadline_ms"):
+            fe.submit(toks[:4], deadline_ms=-1.0)
+        fe.stop()
+
+    def test_transient_compaction_fault_retried(self):
+        """One injected merge crash during the growth op's compaction:
+        the capped-backoff retry succeeds, nothing quarantines."""
+        rng = np.random.default_rng(23)
+        seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8,
+                             segment_min_tokens=1 << 10)
+        seg.append(rng.integers(1, SIGMA, 300).astype(np.int32))
+        new = rng.integers(1, SIGMA, 120).astype(np.int32)
+        with faultinject.inject(FaultSchedule([("merge.mid", 0)])):
+            with AsyncQueryFrontend(_server(seg), max_queue=16,
+                                    growth_backoff_ms=1.0) as fe:
+                info = fe.append(new).result(timeout=120)
+                m = fe.metrics()
+        assert info["merges"] == 1 and info["segments"] == 1
+        assert not info["compaction_quarantined"]
+        assert m["retries"] == 1 and m["quarantined_segments"] == 0
+        assert not m["degraded"]
+
+    def test_poison_compaction_quarantined_pre_compact_serves(self):
+        """A compaction that fails every retry is quarantined: the append
+        itself still lands, the pre-compact segments keep serving exactly,
+        later appends skip compaction, and resume_compaction() recovers."""
+        rng = np.random.default_rng(24)
+        seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8,
+                             segment_min_tokens=1 << 10)
+        first = rng.integers(1, SIGMA, 300).astype(np.int32)
+        seg.append(first)
+        new = rng.integers(1, SIGMA, 120).astype(np.int32)
+        # retries=3 -> exactly 4 attempts; arm a crash for each
+        poison = FaultSchedule([("merge.mid", k) for k in range(4)])
+        with faultinject.inject(poison):
+            with AsyncQueryFrontend(_server(seg), max_queue=16,
+                                    growth_backoff_ms=1.0) as fe:
+                info = fe.append(new).result(timeout=120)
+                assert info["appended"] == 120 and info["merges"] == 0
+                assert info["compaction_quarantined"]
+                assert "compaction_error" in info
+                # pre-compact generation serves: both texts answer exactly
+                got_old = fe.submit(first[5:11]).result(timeout=120)
+                got_new = fe.submit(new[50:56]).result(timeout=120)
+                assert got_old.count >= 1
+                assert got_new.count >= 1
+                # the quarantine sticks: this append must NOT re-attempt
+                # compaction (no armed trigger left would stop it anyway)
+                info2 = fe.append(
+                    rng.integers(1, SIGMA, 50).astype(np.int32)
+                ).result(timeout=120)
+                assert info2["merges"] == 0
+                assert info2["compaction_quarantined"]
+                m = fe.metrics()
+                assert m["quarantined_segments"] == 1
+                assert m["degraded"] and m["retries"] == 3
+                # operator fixed the cause: compaction resumes and merges
+                # the whole backlog of small segments
+                fe.resume_compaction()
+                info3 = fe.append(
+                    rng.integers(1, SIGMA, 50).astype(np.int32)
+                ).result(timeout=120)
+                assert info3["merges"] == 1 and info3["segments"] == 1
+                assert not info3["compaction_quarantined"]
+                assert not fe.metrics()["degraded"]
+        assert len(seg.segments) == 1
+
+    def test_submit_then_immediate_close_resolves_everything(self, built):
+        """Regression: close() right after a burst of submits must resolve
+        every admitted future (drain), not leave callers hanging."""
+        _, toks, index = built
+        want = count_naive(toks, toks[20:24])
+        for trial in range(5):  # race close() against the worker repeatedly
+            fe = AsyncQueryFrontend(_server(index), max_queue=256,
+                                    max_wait_ms=50.0)
+            futs = [fe.submit(toks[20:24]) for _ in range(8)]
+            fe.close()
+            for f in futs:
+                assert f.result(timeout=30).count == want, trial
+            with pytest.raises(RuntimeError):
+                fe.submit(toks[:4])
+
+    def test_close_after_worker_crash_still_resolves(self, built):
+        """Even when the worker crashes on every flush it attempts, close()
+        resolves the leftovers inline (exception or Shutdown, never a
+        hang)."""
+        _, toks, index = built
+        with faultinject.inject(FaultSchedule([("worker.flush", 0)])):
+            fe = AsyncQueryFrontend(_server(index), max_queue=64,
+                                    max_wait_ms=200.0)
+            futs = [fe.submit(toks[20:24]) for _ in range(6)]
+            fe.close()
+            outcomes = []
+            for f in futs:
+                try:
+                    outcomes.append(f.result(timeout=30))
+                except InjectedFault:
+                    outcomes.append("crashed")
+            assert len(outcomes) == 6  # nothing hung
+        assert fe.metrics()["worker_restarts"] <= 1
 
 
 class TestSegmentParallelParity:
