@@ -1,18 +1,32 @@
-"""Compaction benchmark: rebuild-free BWT merge vs raw-token rebuild.
+"""Compaction benchmark: rebuild-free BWT merges vs raw-token rebuild.
 
-``SegmentedIndex.compact(strategy="merge")`` splices per-segment BWTs via
-the ``core.bwt_merge`` interleave walk (no suffix sorting);
-``strategy="rebuild"`` re-sorts the run's raw tokens — the correctness
-oracle.  Each row of ``experiments/BENCH_compact.json`` times both
-strategies over the same catalog and asserts the two produce a
-bit-identical merged index (``outputs_match``) and identical query answers
-(``answers_match``).
+``SegmentedIndex.compact`` has three rebuild-free-capable strategies: the
+pairwise interleave fold, the k-way interleave walk (one walk splices
+every segment — no intermediate indexes), and the cost-model auto pick
+(``strategy="merge"``, the serving default).  ``strategy="rebuild"``
+re-sorts the run's raw tokens — the correctness oracle.  Each row of
+``experiments/BENCH_compact.json`` times all of them over the same
+catalog and asserts every strategy produces a bit-identical merged index
+(``outputs_match``) and identical query answers (``answers_match``).
+``speedup`` is rebuild time over the auto-picked strategy's time — the
+regression gate (``scripts/check_bench_json.py``) fails any row where the
+serving default loses to the rebuild.
 
-``--smoke`` runs the 64 Ki two-segment scale (the CI regression gate row);
-full runs add more scales and a multi-segment catalog.  Timings exclude
-compile: each strategy is warmed on a same-shape throwaway catalog first,
-so the steady-state serving cost (the jit programs are cached per
-power-of-two bucket) is what is measured.
+``--smoke`` runs the 64 Ki scales at 2, 4, and 8 segments (the CI
+regression gate rows).  The 2-segment row is the cold-start equal split;
+the 4- and 8-segment rows use the steady-state serving shape — one large
+accumulated segment plus a tail of fresh small appends (``SHAPES``),
+which is the run ``maybe_compact`` actually folds between flushes.  The
+shape matters: the sequential interleave walk visits every token *after*
+the largest segment, so merges win exactly when the accumulated segment
+dominates the run (and the k-way walk additionally avoids the pairwise
+fold's per-intermediate splices as the tail widens).  An equal split at
+high segment count is the merge-hostile case, and the cost model's job is
+to route it to the rebuild instead — the planner's pick is recorded per
+row as ``strategy``.  Full runs add more corpora and a 128 Ki scale.
+Timings exclude compile: each strategy is warmed on a same-shape
+throwaway catalog first, so the steady-state serving cost (the jit
+programs are cached per power-of-two bucket) is what is measured.
 """
 
 from __future__ import annotations
@@ -37,13 +51,26 @@ DEFAULT_JSON = os.path.join(
 SAMPLE_RATE = 32
 SA_SAMPLE_RATE = 16
 
+STRATEGIES = ("rebuild", "pairwise", "kway", "merge")
+
+# catalog split per segment count, as corpus fractions.  2 segments:
+# cold-start equal halves.  4/8 segments: the serving steady state — one
+# accumulated segment holding most of the corpus plus fresh small appends
+# (each flush adds a small segment; maybe_compact folds the run).
+SHAPES = {
+    2: (1 / 2, 1 / 2),
+    4: (3 / 4, 1 / 8, 1 / 16, 1 / 16),
+    8: (3 / 4, 1 / 16) + (1 / 32,) * 6,
+}
+
 
 def build_catalog(kind: str, n: int, n_segments: int) -> SegmentedIndex:
     toks = corpus(kind, n)
     sigma = al.sigma_of(al.append_sentinel(toks))
     seg = SegmentedIndex(sigma, sample_rate=SAMPLE_RATE,
                          sa_sample_rate=SA_SAMPLE_RATE)
-    bounds = np.linspace(0, len(toks), n_segments + 1).astype(int)
+    shape = SHAPES[n_segments]
+    bounds = np.round(np.cumsum((0.0,) + shape) * len(toks)).astype(int)
     for lo, hi in zip(bounds[:-1], bounds[1:]):
         seg.append(toks[lo:hi])
     return seg
@@ -59,7 +86,7 @@ def restore(seg: SegmentedIndex, snap) -> None:
 
 
 def time_strategy(seg: SegmentedIndex, snap, strategy: str, repeats: int):
-    best, merged = float("inf"), None
+    best, merged, plan = float("inf"), None, None
     for _ in range(repeats):
         restore(seg, snap)
         t0 = time.perf_counter()
@@ -68,7 +95,8 @@ def time_strategy(seg: SegmentedIndex, snap, strategy: str, repeats: int):
         best = min(best, time.perf_counter() - t0)
         assert m >= 1, strategy
         merged = seg.segments[0].index.fm
-    return best, merged
+        plan = seg.compact_last_plan
+    return best, merged, plan
 
 
 def bench_scale(kind: str, n: int, n_segments: int, repeats: int,
@@ -78,13 +106,19 @@ def bench_scale(kind: str, n: int, n_segments: int, repeats: int,
 
     # warm the jit programs (snapshot-restore resets the catalog, so the
     # warmup compaction hits the same pow2 bucket shapes the timed runs do)
-    for strategy in ("merge", "rebuild"):
+    for strategy in STRATEGIES:
         restore(seg, snap)
         seg.compact(strategy=strategy)
 
-    rebuild_s, fm_rebuild = time_strategy(seg, snap, "rebuild", repeats)
-    merge_s, fm_merge = time_strategy(seg, snap, "merge", repeats)
-    outputs_match = not fm_mismatch(fm_merge, fm_rebuild)
+    times, fms, plans = {}, {}, {}
+    for strategy in STRATEGIES:
+        times[strategy], fms[strategy], plans[strategy] = time_strategy(
+            seg, snap, strategy, repeats
+        )
+    outputs_match = all(
+        not fm_mismatch(fms[s], fms["rebuild"]) for s in STRATEGIES[1:]
+    )
+    assert seg.compact_fallbacks == 0, seg.compact_last_fallback_reason
 
     # answers must also be invariant across the compaction itself
     restore(seg, snap)
@@ -99,19 +133,28 @@ def bench_scale(kind: str, n: int, n_segments: int, repeats: int,
     seg.compact(strategy="merge")
     answers_match = bool(np.array_equal(seg.count(pats), before))
 
+    plan = plans["merge"]
     row = {
         "scenario": f"{kind}.{n}.{n_segments}seg",
         "n": int(n),
         "segments": int(n_segments),
-        "merge_s": merge_s,
-        "rebuild_s": rebuild_s,
-        "speedup": rebuild_s / merge_s,
+        "merge_s": times["merge"],
+        "pairwise_s": times["pairwise"],
+        "kway_s": times["kway"],
+        "rebuild_s": times["rebuild"],
+        "speedup": times["rebuild"] / times["merge"],
+        "strategy": plan["strategy"],
+        "est_walk_steps": int(plan["est_walk_steps"]),
+        "actual_walk_steps": int(plan["actual_walk_steps"]),
         "outputs_match": bool(outputs_match),
         "answers_match": answers_match,
     }
     print(
-        f"{row['scenario']}: merge {merge_s * 1e3:.1f}ms vs rebuild "
-        f"{rebuild_s * 1e3:.1f}ms -> {row['speedup']:.2f}x "
+        f"{row['scenario']}: auto[{row['strategy']}] "
+        f"{times['merge'] * 1e3:.1f}ms (pairwise "
+        f"{times['pairwise'] * 1e3:.1f}ms, kway "
+        f"{times['kway'] * 1e3:.1f}ms) vs rebuild "
+        f"{times['rebuild'] * 1e3:.1f}ms -> {row['speedup']:.2f}x "
         f"(bit-identical: {outputs_match})"
     )
     return row
@@ -120,17 +163,16 @@ def bench_scale(kind: str, n: int, n_segments: int, repeats: int,
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="64 Ki two-segment row only (the CI gate)")
+                    help="64 Ki rows at 2/4/8 segments (the CI gate)")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--json", default=DEFAULT_JSON,
                     help="output path ('' disables)")
     args = ap.parse_args(argv)
 
     rng = np.random.default_rng(0)
-    scales = [("dna", 1 << 16, 2)]
+    scales = [("dna", 1 << 16, 2), ("dna", 1 << 16, 4), ("dna", 1 << 16, 8)]
     if not args.smoke:
-        scales += [("dna", 1 << 16, 4), ("english", 1 << 16, 2),
-                   ("dna", 1 << 17, 2)]
+        scales += [("english", 1 << 16, 2), ("dna", 1 << 17, 2)]
     rows = [bench_scale(kind, n, k, args.repeats, rng)
             for kind, n, k in scales]
 

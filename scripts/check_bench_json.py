@@ -6,7 +6,10 @@ Two modes:
   ``experiments/BENCH_*.json`` against the conventions in
   docs/BENCHMARKS.md: top level ``{"bench", "backend", "rows"}``, rows are
   non-empty dicts keyed by ``input``/``scenario``, every ``*_match``
-  correctness bit is true, wall-time fields are finite and non-negative.
+  correctness bit is true, wall-time fields are finite and non-negative,
+  and any row carrying both ``speedup`` and ``outputs_match`` (the
+  compaction rows) has ``speedup >= 1.0`` — a rebuild-free strategy that
+  loses to the rebuild it replaces is a regression, not a baseline.
   A malformed committed artifact fails CI loudly instead of silently
   corrupting the perf trajectory.
 
@@ -71,6 +74,15 @@ def check_schema(path: str) -> dict:
             if (key.endswith(("_s", "_ms")) and isinstance(val, (int, float))
                     and (not math.isfinite(val) or val < 0)):
                 fail(f"{path}: rows[{i}].{key} = {val!r} (bad wall time)")
+        # compaction rows must never lose to the rebuild they replace: a
+        # committed speedup < 1.0 means the serving default regressed (the
+        # PR-10 0.85x row must stay impossible to reintroduce)
+        speedup = row.get("speedup")
+        if (isinstance(speedup, (int, float)) and not isinstance(
+                speedup, bool) and "outputs_match" in row and speedup < 1.0):
+            fail(f"{path}: rows[{i}] ({row_id(row)!r}) speedup = "
+                 f"{speedup:.4g} < 1.0 — the measured strategy lost to its "
+                 "oracle/baseline")
     return payload
 
 

@@ -61,14 +61,32 @@ class BWTIndexConfig:
     ckpt_keep: int = 3            # retained checkpoint steps
     segment_min_tokens: int = 1 << 22  # compact() threshold for small segments
     # background compaction policy (SegmentedIndex.maybe_compact, run by the
-    # serving path between flushes): "merge" = rebuild-free BWT merge
-    # (core/bwt_merge; rebuild remains the fallback for ineligible runs),
-    # "rebuild" = always re-sort from raw tokens.  The trigger fires when
-    # >= trigger_ratio of the catalog consists of small segments (and at
-    # least two exist) — fragments amortize into one merge instead of a
-    # compaction per append.
+    # serving path between flushes): "merge" = cost-model auto-pick per run
+    # between the pairwise fold, the k-way interleave walk, and the rebuild
+    # (core/bwt_merge; rebuild remains the fallback for ineligible runs);
+    # "pairwise"/"kway" force one merge flavor; "rebuild" = always re-sort
+    # from raw tokens.  The trigger is cost-based: a run of small adjacent
+    # segments compacts when the cheapest merge estimate costs at most
+    # trigger_cost_ratio of the rebuild estimate, when re-sorting the run
+    # costs no more than one merge's fixed dispatch (deferring a tiny run
+    # can never pay), or when the run reaches compact_max_small segments
+    # (fan-out backstop).  compact_trigger_ratio is the legacy fixed-ratio
+    # knob, kept for catalog compatibility only.
     compact_strategy: str = "merge"
     compact_trigger_ratio: float = 0.5
+    compact_max_small: int = 8
+    compact_trigger_cost_ratio: float = 0.75
+    # cost-model constants, calibrated from compact_bench --smoke on the
+    # CPU backend: one sequential pairwise walk step, one k-way walk step
+    # (ranks every walker lane, ~2x a pairwise step), one token of
+    # splice/resample work, one token*log2(n) of sort work, fixed
+    # per-merge-op overhead (jit entry + host splice — the term that sinks
+    # the pairwise fold on wide runs)
+    compact_cost_walk_ns: float = 800.0
+    compact_cost_kway_walk_ns: float = 1600.0
+    compact_cost_token_ns: float = 50.0
+    compact_cost_sort_ns: float = 55.0
+    compact_cost_merge_us: float = 10000.0
 
     def replace(self, **kw):
         return dataclasses.replace(self, **kw)

@@ -637,6 +637,59 @@ def stack_fm_indexes(
     )
 
 
+def stack_rank_arrays(fms: list[FMIndex], *, seg_pad: int | None = None,
+                      blocks_pad: int | None = None):
+    """Bucket-stack the rank-addressable arrays of same-layout indexes:
+    ``(fused, blocks, occ, c_mat, nb_vec, blocks_pad)`` with segment i
+    owning block rows [i*blocks_pad, i*blocks_pad + n_blocks_i).
+
+    The rank-only core of ``stack_fm_indexes`` (no SA-sample stacking),
+    built for the k-way merge walk: one batched ``ops.rank_walkers``
+    dispatch addresses every walker's segment through a single array, and
+    the pow2 bucket (``seg_pad`` segments x ``blocks_pad`` blocks) keeps
+    steady-state compactions re-hitting one compiled walk per shape.
+    ``occ`` is flattened to int32[S*NB, sigma] so packed and unpacked
+    layouts share the flat ``seg * blocks_pad + blk`` addressing."""
+    if not fms:
+        raise ValueError("cannot stack an empty run")
+    f0 = fms[0]
+    sig = (f0.sigma, f0.sample_rate, f0.bits)
+    for fm in fms:
+        if (fm.sigma, fm.sample_rate, fm.bits) != sig:
+            raise ValueError(
+                f"mixed layouts {(fm.sigma, fm.sample_rate, fm.bits)} "
+                f"!= {sig}"
+            )
+    sigma, r, bits = sig
+    S = seg_pad or _next_pow2(len(fms))
+    NB = blocks_pad or _next_pow2(max(fm.n_blocks for fm in fms))
+    if S < len(fms) or NB < max(fm.n_blocks for fm in fms):
+        raise ValueError("bucket shape smaller than the run")
+    fused = blocks = occ = None
+    if bits:
+        fused_np = np.zeros((S * NB, f0.fused.shape[1]), np.int32)
+        for i, fm in enumerate(fms):
+            fused_np[i * NB : i * NB + fm.n_blocks] = np.asarray(fm.fused)
+        fused = jnp.asarray(fused_np)
+    else:
+        blocks_np = np.full((S * NB, r), PAD, np.int32)
+        occ_np = np.zeros((S * NB, sigma), np.int32)
+        for i, fm in enumerate(fms):
+            nb = fm.n_blocks
+            blocks_np[i * NB : i * NB + nb] = (
+                np.asarray(fm.bwt).reshape(nb, r)
+            )
+            occ_np[i * NB : i * NB + nb] = np.asarray(fm.occ_samples)[:-1]
+        blocks, occ = jnp.asarray(blocks_np), jnp.asarray(occ_np)
+    c_np = np.zeros((S, sigma), np.int32)
+    for i, fm in enumerate(fms):
+        c_np[i] = np.asarray(fm.c_array)
+    return fused, blocks, occ, jnp.asarray(c_np), jnp.asarray(
+        np.array([fm.n_blocks for fm in fms] + [1] * (S - len(fms)),
+                 np.int32)
+    ), NB
+
+
 def _stack_check(st: StackedFMIndex, fm: FMIndex) -> None:
     """Raise unless ``fm`` fits the stacked bucket layout (same static
     signature, block count within the bucket)."""

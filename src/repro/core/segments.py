@@ -14,10 +14,12 @@ LSM-tree form (as in Lucene-like search systems):
   the candidate sets.
 * ``compact`` folds runs of small adjacent segments into one segment,
   bounding per-query fan-out — the background-merge half of the LSM
-  playbook.  The default strategy is the **rebuild-free BWT merge** of
-  ``core.bwt_merge`` (splice the per-segment BWTs via a rank-directed
-  interleave walk — no suffix sorting); ``strategy="rebuild"`` re-sorts
-  from the retained raw tokens and is the bit-identity oracle.
+  playbook.  The default strategy lets a **cost model** pick, per run,
+  between the rebuild-free BWT merges of ``core.bwt_merge`` — the
+  pairwise fold and the **k-way interleave walk** (all segments spliced
+  in one walk, no intermediate indexes) — and the raw-token rebuild;
+  ``strategy="rebuild"`` forces the re-sort and is the bit-identity
+  oracle for both merge flavors.
 
 Document semantics: every ``append`` creates one immutable *document*, and
 matches never span documents — exactly as matches never span the documents
@@ -47,11 +49,19 @@ from __future__ import annotations
 import dataclasses
 import io
 import json
+import math
 import os
+import warnings
 
 import numpy as np
 
-from .bwt_merge import merge_eligible, merge_fm_indexes
+from .bwt_merge import (
+    context_order_safe,
+    kway_eligible,
+    kway_walk_steps,
+    merge_fm_indexes,
+    merge_kway,
+)
 from .journal import (
     GenerationJournal,
     fsync_path,
@@ -77,6 +87,12 @@ from .pipeline import (
 
 CATALOG_FORMAT = "segmented_index_catalog"
 CATALOG_VERSION = 2  # v2: per-segment document tables (``docs``)
+
+# compaction strategies: "merge" = cost-model auto-pick per run,
+# "pairwise"/"kway" force one BWT-merge flavor (rebuild fallback for
+# ineligible runs), "rebuild" = always re-sort from raw tokens (the
+# bit-identity oracle)
+COMPACT_STRATEGIES = ("merge", "pairwise", "kway", "rebuild")
 
 
 @dataclasses.dataclass
@@ -132,10 +148,17 @@ class SegmentedIndex:
                  parallel: bool | None = None,
                  reserve_pad: bool | None = None,
                  compact_strategy: str = "merge",
-                 compact_trigger_ratio: float = 0.5):
+                 compact_trigger_ratio: float = 0.5,
+                 compact_max_small: int = 8,
+                 compact_cost_walk_ns: float = 800.0,
+                 compact_cost_kway_walk_ns: float = 1600.0,
+                 compact_cost_token_ns: float = 50.0,
+                 compact_cost_sort_ns: float = 55.0,
+                 compact_cost_merge_us: float = 10000.0,
+                 compact_trigger_cost_ratio: float = 0.75):
         if sigma < 2:
             raise ValueError("sigma must cover at least one real token")
-        if compact_strategy not in ("merge", "rebuild"):
+        if compact_strategy not in COMPACT_STRATEGIES:
             raise ValueError(f"unknown compact strategy {compact_strategy!r}")
         self.sigma = sigma
         self.sample_rate = sample_rate
@@ -149,11 +172,36 @@ class SegmentedIndex:
         # whenever >= 2 stackable segments), False = always sequential,
         # True = require the stacked path (raise if segments can't stack)
         self.parallel = parallel
-        # background-compaction policy (maybe_compact): strategy picks the
-        # BWT merge (with rebuild fallback) or forces rebuild; the trigger
-        # fires when >= trigger_ratio of the catalog is small segments
+        # background-compaction policy (maybe_compact): "merge" picks
+        # pairwise / k-way / rebuild per run through the cost model below;
+        # "pairwise"/"kway" force one merge flavor (rebuild stays the
+        # fallback for ineligible runs); "rebuild" always re-sorts.
+        # ``compact_trigger_ratio`` is the legacy fixed-ratio trigger knob,
+        # accepted for catalog compatibility but no longer consulted: the
+        # trigger is cost-based (see ``maybe_compact``).
         self.compact_strategy = compact_strategy
         self.compact_trigger_ratio = compact_trigger_ratio
+        self.compact_max_small = compact_max_small
+        # cost-model constants, rough per-unit wall costs calibrated on the
+        # CPU backend (compact_bench --smoke): one sequential pairwise
+        # rank-walk step (dispatch-latency bound), one k-way walk step (it
+        # ranks every walker lane, so ~2x a pairwise step), one token of
+        # vectorized splice/occ-resample work, one token*log2(n) of rebuild
+        # sort work, and the fixed overhead of one merge operation (jit
+        # entry, host splice) — the term that sinks the pairwise fold on
+        # wide runs
+        self.compact_cost_walk_ns = compact_cost_walk_ns
+        self.compact_cost_kway_walk_ns = compact_cost_kway_walk_ns
+        self.compact_cost_token_ns = compact_cost_token_ns
+        self.compact_cost_sort_ns = compact_cost_sort_ns
+        self.compact_cost_merge_us = compact_cost_merge_us
+        self.compact_trigger_cost_ratio = compact_trigger_cost_ratio
+        # compaction telemetry: merge-strategy runs that fell back to the
+        # O(n log n) rebuild (surfaced through frontend metrics + catalog)
+        self.compact_fallbacks = 0
+        self.compact_last_fallback_reason: str | None = None
+        self.compact_strategy_counts: dict[str, int] = {}
+        self.compact_last_plan: dict | None = None
         self.segments: list[Segment] = []
         self._next_id = 0
         self._stacked_cache: object | None = None
@@ -181,6 +229,13 @@ class SegmentedIndex:
             parallel=cfg.serve_parallel_segments,
             compact_strategy=cfg.compact_strategy,
             compact_trigger_ratio=cfg.compact_trigger_ratio,
+            compact_max_small=cfg.compact_max_small,
+            compact_cost_walk_ns=cfg.compact_cost_walk_ns,
+            compact_cost_kway_walk_ns=cfg.compact_cost_kway_walk_ns,
+            compact_cost_token_ns=cfg.compact_cost_token_ns,
+            compact_cost_sort_ns=cfg.compact_cost_sort_ns,
+            compact_cost_merge_us=cfg.compact_cost_merge_us,
+            compact_trigger_cost_ratio=cfg.compact_trigger_cost_ratio,
         )
 
     # -- growth --------------------------------------------------------------
@@ -244,41 +299,142 @@ class SegmentedIndex:
 
     # -- compaction ----------------------------------------------------------
 
-    def _plan_run(self, run: list[Segment]) -> tuple[list[Segment], bool]:
-        """(canonical text order, mergeable) for a compaction run.
+    def _prepared_text(self, seg: Segment) -> np.ndarray:
+        """The segment's prepared text (sentinel-terminated, pad-filled
+        documents, concatenated) — the exact token string its index
+        covers, re-derived from the retained raw tokens."""
+        return np.concatenate([
+            prepare_tokens(d, self.sample_rate, self.sigma,
+                           self.reserve_pad)[0]
+            for d in seg.doc_tokens()
+        ])
 
-        The BWT merge requires every LEFT operand to be a single prepared
-        document, so at most one multi-document segment can participate —
-        it must anchor the fold as the rightmost text.  The walk visits
-        the RIGHT (accumulated) side of every fold, so single-document
-        segments order largest-first: the largest lands as the FINAL
-        fold's left operand and is never walked at all, and each smaller
-        segment is walked in fewer folds than anything bigger.  Both
-        strategies build this same layout, keeping them bit-identical;
-        queries cannot observe document order (``docs`` carries the
-        global-coordinate mapping).
+    def _est_costs(self, ordered: list[Segment]) -> dict:
+        """Estimated wall cost (ns) per strategy for a canonically ordered
+        run, from run sizes/counts alone (no token access).
+
+        Both merge flavors walk every text but the first — the same
+        ``n - n_first`` sequential rank steps, though the k-way step is
+        costlier (it ranks every walker lane) — but the pairwise fold
+        additionally splices and re-samples every intermediate
+        accumulator (the fold runs right-to-left from the smallest
+        operands, so the intermediate sizes are the suffix sums) and
+        pays the fixed per-merge overhead k-1 times; the rebuild
+        re-sorts everything.
         """
-        multis = [s for s in run if s.multi_doc]
-        if len(multis) > 1:
-            return list(run), False  # merge ineligible; corpus order
-        singles = [s for s in run if not s.multi_doc]
-        singles.sort(key=lambda s: -s.n_tokens)  # stable: ties corpus order
-        return singles + multis, True
+        lens = [s.n_tokens + len(s.docs) for s in ordered]  # ~prepared
+        n = sum(lens)
+        w = max(0, sum(lens[1:]) - 1)  # sequential walk steps
+        fixed = self.compact_cost_merge_us * 1e3
+        # right-assoc fold accumulator sizes (includes the final splice)
+        suffixes = np.cumsum(lens[::-1])[1:]
+        return {
+            "pairwise": self.compact_cost_walk_ns * w
+            + self.compact_cost_token_ns * float(suffixes.sum())
+            + fixed * (len(lens) - 1),
+            "kway": self.compact_cost_kway_walk_ns * w
+            + self.compact_cost_token_ns * n + fixed,
+            "rebuild": self.compact_cost_sort_ns * n
+            * math.log2(max(n, 2)),
+        }
 
-    def _run_merge_reason(self, ordered: list[Segment]) -> str | None:
-        """Why this (canonically ordered) run cannot BWT-merge, or None.
-        Checked against the tail index only — every fold accumulator keeps
-        the tail's static layout, so pairwise eligibility is transitive."""
-        acc = ordered[-1].index.fm
-        for seg in reversed(ordered[:-1]):
-            reason = merge_eligible(seg.index.fm, acc)
-            if reason:
-                return reason
-        return None
+    def _plan_run(self, run: list[Segment],
+                  strategy: str | None = None) -> tuple[list[Segment], dict]:
+        """(canonical text order, plan) for a compaction run.
+
+        Candidate orders (stable, ties in corpus order): largest-first —
+        the largest text is never walked by either merge flavor, so it
+        saves the most walk steps — and, when they differ, singles-first
+        (multi-document segments at the right end).  A single-document
+        left operand is *provably* context-order safe (its tied pad/
+        sentinel positions are always followed by more padding, which
+        sorts above any continuation), while a multi-document left
+        operand's safety depends on the actual tokens — so the second
+        order rescues exactly the runs PR 5's right-operand restriction
+        used to allow, without giving up the general case.  Queries
+        cannot observe document order (``docs`` carries the
+        global-coordinate mapping), so any order is answer-invariant;
+        the strategies all build the plan's single chosen layout and
+        stay bit-identical to each other.
+
+        The plan picks the cheapest estimated strategy (``_est_costs``)
+        among those the run is *eligible* for: the merge flavors require
+        the layout conditions of ``bwt_merge.kway_eligible`` plus
+        context-order safety of every operand against the text that
+        follows it (``bwt_merge.context_order_safe`` — the exact,
+        token-level check that lets merged multi-document segments sit
+        anywhere in the run when their tokens permit).  ``strategy``
+        forces one flavor ("merge" = cost-model auto); ineligible runs
+        record the fallback reason.
+        """
+        if strategy is None:
+            strategy = self.compact_strategy
+        bysize = sorted(run, key=lambda s: -s.n_tokens)
+        singles_first = ([s for s in bysize if not s.multi_doc]
+                         + [s for s in bysize if s.multi_doc])
+        candidates = [bysize]
+        if singles_first != bysize:
+            candidates.append(singles_first)
+        # the canonical layout must NOT depend on the requested strategy:
+        # a forced rebuild builds the same document order the merge
+        # flavors would, keeping all strategies bit-identical oracles of
+        # each other
+        ordered, reason = bysize, None
+        for cand in candidates:
+            reason = kway_eligible([s.index.fm for s in cand])
+            # only multi-document left operands need the token-level scan:
+            # a single-document prepared text ends in its pad/sentinel run,
+            # whose tied positions are always followed by more padding and
+            # so sort above any continuation — provably safe, no scan
+            if reason is None and any(s.multi_doc for s in cand[:-1]):
+                texts = [self._prepared_text(s) for s in cand]
+                for i in range(len(texts) - 1):
+                    if not cand[i].multi_doc:
+                        continue
+                    if not context_order_safe(
+                        texts[i], np.concatenate(texts[i + 1 :])
+                    ):
+                        reason = (
+                            f"operand {i} is not context-order safe "
+                            f"against the texts that follow it "
+                            f"(tied document tails)"
+                        )
+                        break
+            if reason is None:
+                ordered = cand
+                break
+        if strategy == "rebuild":
+            reason = "rebuild requested"
+        est = self._est_costs(ordered)
+        if reason is not None:
+            chosen = "rebuild"
+        elif strategy in ("pairwise", "kway"):
+            chosen = strategy
+        else:  # cost model: cheapest eligible strategy wins
+            chosen = min(est, key=est.get)
+            if len(ordered) == 2 and chosen == "kway":
+                chosen = "pairwise"  # identical cost and walk at k = 2
+        return ordered, {
+            "strategy": chosen, "requested": strategy, "reason": reason,
+            "est": est, "est_walk_steps": (
+                kway_walk_steps(s.index.fm.length for s in ordered)
+                if reason is None else 0
+            ),
+        }
 
     def _merge_run(self, run: list[Segment], strategy: str) -> Segment:
-        """Fold one run of adjacent segments into a single segment."""
-        ordered, mergeable = self._plan_run(run)
+        """Fold one run of adjacent segments into a single segment,
+        recording the planner's decision (and any rebuild fallback) in
+        the compaction telemetry."""
+        ordered, plan = self._plan_run(run, strategy)
+        chosen = plan["strategy"]
+        if plan["reason"] is not None and plan["requested"] != "rebuild":
+            self.compact_fallbacks += 1
+            self.compact_last_fallback_reason = plan["reason"]
+            warnings.warn(
+                f"compaction fell back to an O(n log n) rebuild: "
+                f"{plan['reason']}", RuntimeWarning, stacklevel=3,
+            )
         offset = min(s.offset for s in run)
         docs, toks = [], []
         for seg in ordered:
@@ -289,14 +445,21 @@ class SegmentedIndex:
         n_tokens = sum(s.n_tokens for s in run)
 
         fm = None
-        if strategy == "merge" and mergeable \
-                and self._run_merge_reason(ordered) is None:
+        if chosen == "kway":
+            fm = merge_kway([s.index.fm for s in ordered],
+                            compress_sa=self.compress_sa, pack=self.pack)
+        elif chosen == "pairwise":
             acc = ordered[-1].index.fm
             for seg in reversed(ordered[:-1]):
                 acc = merge_fm_indexes(seg.index.fm, acc,
                                        compress_sa=self.compress_sa,
                                        pack=self.pack)
             fm = acc
+        plan["actual_walk_steps"] = (
+            kway_walk_steps(s.index.fm.length for s in ordered)
+            if fm is not None else 0
+        )
+        self.compact_last_plan = plan
         if fm is None:  # rebuild fallback/oracle: same text, same layout
             texts, sigmas = [], []
             for seg in ordered:
@@ -317,6 +480,11 @@ class SegmentedIndex:
                 fm, None, fm.bwt, fm.row, fm.sigma, fm.length,
                 sum(ln + 1 for ln, _ in docs),
             )
+        # counts completed merges only: a crash mid-merge leaves the
+        # operands (and the counters) exactly as they were
+        self.compact_strategy_counts[chosen] = (
+            self.compact_strategy_counts.get(chosen, 0) + 1
+        )
         return Segment(self._next_id_bump(), offset, n_tokens, index,
                        tokens, tuple(docs))
 
@@ -336,18 +504,21 @@ class SegmentedIndex:
         docstring).  Returns the number of merges performed.
 
         ``strategy``: "merge" (default, or the constructor's
-        ``compact_strategy``) splices the per-segment BWTs rebuild-free via
-        ``core.bwt_merge``, falling back to a rebuild for ineligible runs
-        (distributed segments, mixed layouts, more than one already-merged
-        segment in a run, SA stride not dividing a member's text);
-        "rebuild" forces the raw-token rebuild — the merge path's
-        bit-identity oracle.  A live stacked fan-out catalog is updated
-        incrementally (``fm_index.stacked_replace_run``) instead of being
-        re-assembled from scratch.
+        ``compact_strategy``) lets the cost model pick the cheapest of the
+        k-way interleave walk, the pairwise fold, and the rebuild per run
+        (``_plan_run``); "kway"/"pairwise" force one merge flavor; all
+        three fall back to a rebuild — counted in ``compact_fallbacks``
+        and warned about — for ineligible runs (distributed segments,
+        mixed layouts, SA stride not dividing a non-last member's text,
+        context-order-unsafe document tails); "rebuild" forces the
+        raw-token rebuild — the merge paths' bit-identity oracle.  A live
+        stacked fan-out catalog is updated incrementally
+        (``fm_index.stacked_replace_run``) instead of being re-assembled
+        from scratch.
         """
         if strategy is None:
             strategy = self.compact_strategy
-        if strategy not in ("merge", "rebuild"):
+        if strategy not in COMPACT_STRATEGIES:
             raise ValueError(f"unknown compact strategy {strategy!r}")
         if min_tokens is None:
             min_tokens = self.segment_min_tokens
@@ -400,19 +571,49 @@ class SegmentedIndex:
         self._stacked_cache = st
 
     def maybe_compact(self, strategy: str | None = None) -> int:
-        """Run ``compact`` when the background policy triggers: at least
-        two segments are below ``segment_min_tokens`` AND small segments
-        make up at least ``compact_trigger_ratio`` of the catalog.  The
-        serving path calls this after appends, so steady-state serving
-        pays O(merge) per compaction, never O(corpus) of sorting.  Returns
+        """Run ``compact`` when the background policy triggers.
+
+        The trigger is cost-based: for each maximal adjacent run of >= 2
+        segments below ``segment_min_tokens``, compact fires when the
+        cheapest estimated merge strategy (``_est_costs``) costs at most
+        ``compact_trigger_cost_ratio`` of the estimated rebuild — i.e.
+        when the rebuild-free paths actually pay for themselves — OR when
+        the run is so small that re-sorting it costs no more than one
+        merge's fixed dispatch overhead (deferring such a run can never
+        pay: any future merge of it costs at least that dispatch, so it
+        compacts immediately, usually via the rebuild) — OR when the run
+        has grown to ``compact_max_small`` segments (a backstop so
+        per-query fan-out overhead cannot accumulate unboundedly while
+        the cost model keeps deferring).  Estimates use only run sizes
+        and counts; the exact eligibility checks (layout, context-order
+        safety) happen at execute time in ``_plan_run``.  The serving
+        path calls this after appends, so steady-state serving pays
+        O(merge) per compaction, never O(corpus) of sorting.  Returns
         merges performed (0 when the trigger does not fire)."""
         mt = self.segment_min_tokens
         if mt is None or len(self.segments) < 2:
             return 0
-        small = sum(1 for s in self.segments if s.n_tokens < mt)
-        if small < 2 or small < self.compact_trigger_ratio * len(self.segments):
-            return 0
-        return self.compact(strategy=strategy)
+        run: list[Segment] = []
+        runs: list[list[Segment]] = []
+        for seg in self.segments:
+            if seg.n_tokens < mt:
+                run.append(seg)
+            elif run:
+                runs.append(run)
+                run = []
+        if run:
+            runs.append(run)
+        for r in runs:
+            if len(r) < 2:
+                continue
+            if len(r) >= self.compact_max_small:
+                return self.compact(strategy=strategy)
+            est = self._est_costs(sorted(r, key=lambda s: -s.n_tokens))
+            best = min(est["pairwise"], est["kway"])
+            if (best <= self.compact_trigger_cost_ratio * est["rebuild"]
+                    or est["rebuild"] <= self.compact_cost_merge_us * 1e3):
+                return self.compact(strategy=strategy)
+        return 0
 
     def _next_id_bump(self) -> int:
         i = self._next_id
@@ -546,6 +747,9 @@ class SegmentedIndex:
             "segment_min_tokens": self.segment_min_tokens,
             "compact_strategy": self.compact_strategy,
             "compact_trigger_ratio": self.compact_trigger_ratio,
+            "compact_max_small": self.compact_max_small,
+            "compact_fallbacks": self.compact_fallbacks,
+            "compact_last_fallback_reason": self.compact_last_fallback_reason,
             "sa_config": self.sa_config._asdict(),
             "next_id": self._next_id, "next_offset": self.coord_end,
             "segments": self.catalog(),
@@ -654,6 +858,7 @@ class SegmentedIndex:
             segment_min_tokens=cat.get("segment_min_tokens"),
             compact_strategy=cat.get("compact_strategy", "merge"),
             compact_trigger_ratio=cat.get("compact_trigger_ratio", 0.5),
+            compact_max_small=cat.get("compact_max_small", 8),
             sa_config=DistSAConfig(**cat.get(
                 "sa_config", DistSAConfig()._asdict()
             )),
@@ -661,6 +866,12 @@ class SegmentedIndex:
         knobs.update(kwargs)
         self = cls(cat["sigma"], **knobs)
         self._next_id = cat["next_id"]
+        # fallback telemetry survives restarts (additive keys; old catalogs
+        # restore to the zero state)
+        self.compact_fallbacks = int(cat.get("compact_fallbacks", 0))
+        self.compact_last_fallback_reason = cat.get(
+            "compact_last_fallback_reason"
+        )
         for ent in cat["segments"]:
             name = f"seg_{ent['seg_id']:06d}"
             seg_dir = os.path.join(directory, name)

@@ -217,6 +217,25 @@ def rank_packed(fused, block_idx, c, cutoff, *, bits: int, sigma: int,
     return out[:B]
 
 
+def rank_walkers(fused, blocks, occ, block_idx, c, cutoff, *, bits: int,
+                 sigma: int):
+    """Full Occ(c_i, block_idx_i * r + cutoff_i) on either block layout in
+    ONE batched dispatch — the per-step rank call of the BWT-merge
+    interleave walks (pairwise and k-way).
+
+    Packed layouts (``bits`` > 0) pass ``fused`` (checkpoint base folds
+    into the kernel); unpacked layouts pass ``blocks`` plus flat per-block
+    Occ checkpoints ``occ`` int32[n_blocks, sigma].  ``block_idx`` may
+    address a stacked multi-segment array (``fm_index.stack_rank_arrays``)
+    with the lane base already folded in by the caller, so one dispatch
+    ranks every walker of a k-way merge step against its own segment.
+    """
+    if bits:
+        return rank_packed(fused, block_idx, c, cutoff,
+                           bits=bits, sigma=sigma)
+    return occ[block_idx, c] + rank_unpacked(blocks, block_idx, c, cutoff)
+
+
 @functools.partial(jax.jit, static_argnames=("impl",))
 def rank_unpacked(bwt_blocks, block_idx, c, cutoff, *, impl: str | None = None):
     """Batched in-block rank counts over unpacked int32 blocks (the sigma>16

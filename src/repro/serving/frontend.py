@@ -553,6 +553,16 @@ class AsyncQueryFrontend:
                 "quarantined_segments": self.quarantined_segments,
                 "deadline_exceeded": self.deadline_exceeded,
                 "degraded": degraded,
+                # compaction planner telemetry (SegmentedIndex; zero/empty
+                # for monolithic indexes): merge-strategy runs that fell
+                # back to the O(n log n) rebuild, why the last one did,
+                # and how often each strategy actually ran
+                "compact_fallbacks": int(getattr(
+                    self.server.index, "compact_fallbacks", 0)),
+                "compact_last_fallback_reason": getattr(
+                    self.server.index, "compact_last_fallback_reason", None),
+                "compact_strategy_counts": dict(getattr(
+                    self.server.index, "compact_strategy_counts", {}) or {}),
                 "buckets": {
                     key: b.summary()
                     for key, b in sorted(self._buckets.items())

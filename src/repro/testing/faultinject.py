@@ -20,7 +20,10 @@ Failpoint catalog (every name the tree currently hits):
 ``io.rename``      before the atomic rename that publishes an artifact or
                    commits a generation
 ``merge.mid``      mid BWT-merge, after the interleave walk and before the
-                   merged index exists (``core.bwt_merge``)
+                   merged index exists (``core.bwt_merge`` — hit by both
+                   the pairwise and the k-way path)
+``merge.kway``     mid k-way merge only: after the chained multi-walker
+                   walk, before the one-pass splice (``bwt_merge.merge_kway``)
 ``worker.flush``   inside the serving frontend's flush worker, outside its
                    recovery guards — simulates the worker thread dying
 ``restore.checksum`` while verifying an artifact checksum on restore — a
@@ -46,6 +49,7 @@ FAILPOINTS = (
     "io.fsync",
     "io.rename",
     "merge.mid",
+    "merge.kway",
     "worker.flush",
     "restore.checksum",
 )

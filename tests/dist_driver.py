@@ -459,11 +459,12 @@ def scenario_index_io():
 
 
 def scenario_seg_merge():
-    """Merge-vs-rebuild compaction parity with forced host devices present:
-    segment builds stay single-device, and the BWT-merge walk must produce
-    the identical index (and identical answers) no matter how many devices
-    the backend exposes.  Also exercises the rebuild fallback for a run
-    with two already-merged (multi-document) segments."""
+    """K-way-vs-rebuild compaction parity with forced host devices present:
+    segment builds stay single-device, and the k-way interleave walk must
+    produce the identical index (and identical answers) no matter how many
+    devices the backend exposes.  Also folds two already-merged
+    (multi-document) segments — merged x merged compacts rebuild-free now
+    that the left-operand restriction is lifted."""
     from repro.core.fm_index import PAD
     from repro.core.segments import SegmentedIndex
 
@@ -489,7 +490,10 @@ def scenario_seg_merge():
     want_c = seg_m.count(pats)
     want_p, want_k = seg_m.locate(pats, k)
 
-    assert seg_m.compact(strategy="merge") == 1
+    # one k=4 interleave walk folds the whole catalog, no fallback
+    assert seg_m.compact(strategy="kway") == 1
+    assert seg_m.compact_fallbacks == 0, seg_m.compact_last_fallback_reason
+    assert seg_m.compact_strategy_counts == {"kway": 1}
     assert seg_r.compact(strategy="rebuild") == 1
     from repro.core.fm_index import fm_mismatch
 
@@ -500,19 +504,32 @@ def scenario_seg_merge():
     pos, cnt = seg_m.locate(pats, k)
     assert np.array_equal(pos, want_p) and np.array_equal(cnt, want_k)
 
-    # two multi-document segments in one run: merge must FALL BACK to the
-    # rebuild (a multi-document text can only be the right operand), and
-    # answers must still be invariant
+    # grow two more documents and fold them into a SECOND multi-doc
+    # segment (the thresholded compact leaves the big segment alone),
+    # then fold merged x merged rebuild-free: the left-operand
+    # restriction is lifted when the tokens are context-order safe.
+    # The follower's leading document is all-ones (the minimal token),
+    # which structurally wins every pad-boundary tie of the left multi —
+    # unsafe corpora would fall back to the rebuild, counted, instead
+    extra = [np.ones(34, np.int32),
+             rng.integers(1, sigma, 21).astype(np.int32)]
     for s in (seg_m, seg_r):
-        s.append(rng.integers(1, sigma, 16).astype(np.int32))
-        s.append(rng.integers(1, sigma, 24).astype(np.int32))
-        assert s.compact() == 1 and len(s.segments) == 1
-    seg_m.segments += seg_r.segments  # adjacent multi-doc pair (synthetic)
-    seg_m.segments[1].offset = seg_m.segments[0].n_tokens
-    seg_m._stacked_cache = None
-    assert seg_m._plan_run(seg_m.segments)[1] is False
+        for c in extra:
+            s.append(c)
+    assert seg_m.compact(min_tokens=60, strategy="kway") == 1
+    assert seg_r.compact(min_tokens=60, strategy="rebuild") == 1
+    assert all(s.multi_doc for s in seg_m.segments)
+    _, plan = seg_m._plan_run(seg_m.segments, "kway")
+    assert plan["reason"] is None, plan["reason"]
+    full = np.concatenate([full] + extra)
     c_before = seg_m.count(pats)
-    assert seg_m.compact(strategy="merge") == 1  # silently rebuilds
+    assert seg_m.compact(strategy="kway") == 1  # merged x merged, no rebuild
+    assert seg_m.compact_fallbacks == 0, seg_m.compact_last_fallback_reason
+    assert seg_m.compact_strategy_counts == {"kway": 3}
+    assert seg_r.compact(strategy="rebuild") == 1
+    diff = fm_mismatch(seg_m.segments[0].index.fm,
+                       seg_r.segments[0].index.fm)
+    assert not diff, diff
     assert np.array_equal(seg_m.count(pats), c_before)
     print("seg_merge parity ok")
 

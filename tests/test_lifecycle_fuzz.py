@@ -1,14 +1,17 @@
 """Randomized lifecycle conformance: deterministic-seed interleavings of
-append / compact(merge) / compact(rebuild) / save / load / count / locate,
-asserted bit-identical against a document-set oracle at EVERY step.
+append / compact (cost-model auto, forced pairwise fold, forced k-way
+walk, rebuild) / save / load / count / locate, asserted bit-identical
+against a document-set oracle at EVERY step.
 
 The invariant under test is the document semantics of ``SegmentedIndex``:
 answers are a pure function of the append history — matches never span
-documents, and compaction (either strategy) never changes any answer.  On
-top of the answer oracle, every compaction step is shadow-run with the
-OTHER strategy and the resulting merged indexes compared field-by-field:
-``compact(strategy="merge")`` must be bit-identical to
-``compact(strategy="rebuild")`` (the BWT-merge acceptance criterion).
+documents, and compaction (any strategy) never changes any answer.  On
+top of the answer oracle, every compaction step is shadow-run under ALL
+FOUR strategies and the resulting merged indexes compared field-by-field:
+``compact(strategy=s)`` for every s must be bit-identical to
+``compact(strategy="rebuild")`` (the BWT-merge acceptance criterion —
+covering the rebuild fallback paths whenever a drawn run is merge-
+ineligible or context-order unsafe).
 
 The matrix covers sigma in {2, 4, 16, 17} — the 2-bit/4-bit/unpacked
 packing boundaries after the reserved pad slot — and both ``reserve_pad``
@@ -98,28 +101,34 @@ def check_answers(seg, oracle, rng, sigma, ctx):
     assert np.array_equal(got_p, want_p), (ctx, "locate positions")
 
 
+STRATEGIES = ("merge", "pairwise", "kway", "rebuild")
+
+
 def shadow_compact_identical(seg, min_tokens, strategy, ctx):
-    """Run compact under BOTH strategies from the same state; assert the
-    merged segments come out bit-identical, then leave ``seg`` compacted
-    with ``strategy``."""
+    """Run compact under EVERY strategy (cost-model auto, forced pairwise
+    fold, forced k-way walk, rebuild) from the same state; assert the
+    merged segments come out bit-identical across all of them, then leave
+    ``seg`` compacted with ``strategy``."""
     snap_segments, snap_next = list(seg.segments), seg._next_id
     before_ids = {s.seg_id for s in snap_segments}
 
     results = {}
-    for strat in ("merge", "rebuild"):
+    for strat in STRATEGIES:
         seg.segments, seg._next_id = list(snap_segments), snap_next
         seg._stacked_cache = None
         merged = seg.compact(min_tokens=min_tokens, strategy=strat)
         results[strat] = (merged, list(seg.segments), seg._next_id)
-    assert results["merge"][0] == results["rebuild"][0], ctx
-    segs_m, segs_r = results["merge"][1], results["rebuild"][1]
-    assert len(segs_m) == len(segs_r), ctx
-    for sm, sr in zip(segs_m, segs_r):
-        assert (sm.offset, sm.n_tokens, sm.docs) == \
-            (sr.offset, sr.n_tokens, sr.docs), ctx
-        if sm.seg_id in before_ids:
-            continue  # untouched segment, same object
-        assert_fm_identical(sm.index.fm, sr.index.fm, ctx)
+    segs_r = results["rebuild"][1]
+    for strat in STRATEGIES[:-1]:
+        assert results[strat][0] == results["rebuild"][0], (ctx, strat)
+        segs_s = results[strat][1]
+        assert len(segs_s) == len(segs_r), (ctx, strat)
+        for sm, sr in zip(segs_s, segs_r):
+            assert (sm.offset, sm.n_tokens, sm.docs) == \
+                (sr.offset, sr.n_tokens, sr.docs), (ctx, strat)
+            if sm.seg_id in before_ids:
+                continue  # untouched segment, same object
+            assert_fm_identical(sm.index.fm, sr.index.fm, (ctx, strat))
     merged, segments, next_id = results[strategy]
     seg.segments, seg._next_id = segments, next_id
     seg._stacked_cache = None
@@ -149,7 +158,7 @@ def test_lifecycle_fuzz(sigma, reserve_pad, tmp_path):
             seg.append(toks)
             oracle.append(toks)
         elif roll < 0.70 and len(seg.segments) >= 2:
-            strategy = "merge" if rng.random() < 0.7 else "rebuild"
+            strategy = STRATEGIES[int(rng.integers(len(STRATEGIES)))]
             # merge every current segment half the time, only small ones
             # the other half (exercises runs bounded by large segments)
             min_tokens = None if rng.random() < 0.5 else 40
@@ -310,10 +319,13 @@ class TestCrashRecovery:
     def test_merge_crash_leaves_operands_serving(self, tmp_path):
         """A crash mid BWT-merge (``merge.mid``) must leave the operand
         segments untouched and answering; the retried compact succeeds
-        with invariant answers."""
+        with invariant answers.  (Forced pairwise: the cost model would
+        pick the rebuild for a run this small and never hit the merge
+        failpoint.)"""
         rng = np.random.default_rng(6)
         seg = SegmentedIndex(self.SIGMA, sample_rate=SAMPLE_RATE,
-                             sa_sample_rate=SA_SAMPLE_RATE)
+                             sa_sample_rate=SA_SAMPLE_RATE,
+                             compact_strategy="pairwise")
         oracle = DocOracle()
         for m in (21, 13):
             d = rng.integers(1, self.SIGMA, m).astype(np.int32)
@@ -326,6 +338,40 @@ class TestCrashRecovery:
         assert [s.seg_id for s in seg.segments] == ids_before
         check_answers(seg, oracle, rng, self.SIGMA, "post-crash")
         assert seg.compact(min_tokens=None) == 1
+        check_answers(seg, oracle, rng, self.SIGMA, "post-retry")
+
+    def test_kway_crash_leaves_operands_serving(self, tmp_path):
+        """A crash mid k-way merge (``merge.kway``, hit only by the k-way
+        walk) must leave the operand segments untouched and the previously
+        committed generation loadable; the retried compact succeeds with
+        invariant answers."""
+        rng = np.random.default_rng(9)
+        seg = SegmentedIndex(self.SIGMA, sample_rate=SAMPLE_RATE,
+                             sa_sample_rate=SA_SAMPLE_RATE,
+                             compact_strategy="kway")
+        oracle = DocOracle()
+        for m in (21, 13, 34):
+            d = rng.integers(1, self.SIGMA, m).astype(np.int32)
+            seg.append(d)
+            oracle.append(d)
+        base = str(tmp_path / "base")
+        seg.save(base)
+        gen0 = GenerationJournal(base).committed()["generation"]
+        ids_before = [s.seg_id for s in seg.segments]
+        with faultinject.inject(FaultSchedule([("merge.kway", 0)])):
+            with pytest.raises(InjectedFault):
+                seg.compact(min_tokens=None)
+        # in-memory operands untouched and answering
+        assert [s.seg_id for s in seg.segments] == ids_before
+        check_answers(seg, oracle, rng, self.SIGMA, "post-kway-crash")
+        # the committed generation still serves bit-for-bit
+        back = SegmentedIndex.load(base)
+        assert GenerationJournal(base).committed()["generation"] == gen0
+        assert not back.degraded
+        check_answers(back, oracle, rng, self.SIGMA, "prior-generation")
+        # retry compacts through the k-way walk (no fallback) exactly
+        assert seg.compact(min_tokens=None) == 1
+        assert seg.compact_strategy_counts.get("kway", 0) == 1
         check_answers(seg, oracle, rng, self.SIGMA, "post-retry")
 
 

@@ -173,20 +173,42 @@ class TestCompact:
         assert seg.compact() == 0 and len(seg.segments) == 1
 
     def test_maybe_compact_policy(self):
-        """Background trigger: fires once small segments are >= 2 and make
-        up at least trigger_ratio of the catalog."""
+        """Cost-based background trigger: fires when the cheapest merge
+        estimate undercuts the rebuild estimate; a run still needs >= 2
+        adjacent smalls."""
         rng = np.random.default_rng(23)
         seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8,
                              segment_min_tokens=100,
-                             compact_trigger_ratio=0.5)
+                             # make merging estimate-cheap for tiny runs so
+                             # the cost trigger (not the backstop) decides
+                             compact_cost_merge_us=0.0,
+                             compact_cost_walk_ns=1.0,
+                             compact_cost_token_ns=1.0)
         seg.append(rng.integers(1, SIGMA, 400).astype(np.int32))
         seg.append(rng.integers(1, SIGMA, 30).astype(np.int32))
-        assert seg.maybe_compact() == 0      # one small of two: ratio met,
-        #                                      but a run needs >= 2 smalls
+        assert seg.maybe_compact() == 0      # a run needs >= 2 smalls
         seg.append(rng.integers(1, SIGMA, 40).astype(np.int32))
-        assert seg.maybe_compact() == 1      # 2/3 small -> merge the run
+        assert seg.maybe_compact() == 1      # merge estimate beats rebuild
         assert [len(s.docs) for s in seg.segments] == [1, 2]
         assert seg.maybe_compact() == 0      # nothing small is adjacent
+
+    def test_maybe_compact_cost_deferral_and_backstop(self):
+        """When no merge flavor pays for itself vs the rebuild, runs defer
+        — until the compact_max_small backstop bounds per-query fan-out.
+        compact_cost_merge_us=0 disables the immediate-fire clause (a run
+        whose rebuild costs less than one merge dispatch compacts right
+        away), isolating the deferral path: equal tiny segments make the
+        sequential walk estimate dominate the vectorized sort estimate."""
+        rng = np.random.default_rng(29)
+        seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8,
+                             segment_min_tokens=100, compact_max_small=4,
+                             compact_cost_merge_us=0.0)
+        for _ in range(3):
+            seg.append(rng.integers(1, SIGMA, 30).astype(np.int32))
+            assert seg.maybe_compact() == 0  # cost model defers
+        seg.append(rng.integers(1, SIGMA, 30).astype(np.int32))
+        assert seg.maybe_compact() == 1      # 4 smalls: backstop fires
+        assert len(seg.segments) == 1 and len(seg.segments[0].docs) == 4
 
 
 class TestLifecycle:
@@ -399,3 +421,144 @@ class TestMergeEdgeCases:
         seq = seg.count(pats)
         seg.parallel = True
         assert np.array_equal(got, seq)
+
+
+class TestKWayAndPlanner:
+    """K-way interleave merge + cost-based planner: merged-of-merged
+    operands on BOTH sides (the PR 5 'multi-doc only as the right operand'
+    restriction is gone), bit-identity against the rebuild oracle across
+    alphabets, direct merge_kway conformance, and rebuild-fallback
+    telemetry for context-order-unsafe runs."""
+
+    def _grow(self, seed, sigma, sizes, strategy, r=8, srate=4):
+        rng = np.random.default_rng(seed)
+        seg = SegmentedIndex(sigma, sample_rate=r, sa_sample_rate=srate,
+                             compact_strategy=strategy)
+        for n in sizes:
+            seg.append(rng.integers(1, sigma, n).astype(np.int32))
+        return seg
+
+    @pytest.mark.parametrize("sigma", [2, 4, 16, 17])
+    def test_merged_of_merged_both_sides(self, sigma):
+        """Two already-merged multi-doc segments compact into one,
+        bit-identical to the rebuild, under every strategy."""
+        from repro.core.fm_index import fm_mismatch
+
+        sizes = (57, 33, 41, 29)
+        final = {}
+        for strategy in ("kway", "pairwise", "merge", "rebuild"):
+            seg = self._grow(41 + sigma, sigma, sizes, strategy)
+            # pre-merge adjacent pairs -> two multi-doc segments
+            a = seg._merge_run(seg.segments[:2], "rebuild")
+            b = seg._merge_run(seg.segments[2:], "rebuild")
+            seg.segments = [a, b]
+            seg._stacked_cache = None
+            assert all(s.multi_doc for s in seg.segments)
+            assert seg.compact(strategy=strategy) == 1
+            final[strategy] = seg
+        want = final["rebuild"].segments[0].index.fm
+        for strategy in ("kway", "pairwise", "merge"):
+            got = final[strategy].segments[0].index.fm
+            assert not (d := fm_mismatch(got, want)), (strategy, d)
+            # answer-invariance on top of bit-identity
+            assert final[strategy].segments[0].docs == \
+                final["rebuild"].segments[0].docs
+
+    def test_kway_runs_without_fallback_on_typical_text(self):
+        """Random multi-doc corpora are context-order safe in practice
+        (document pads sort above every real token): the forced k-way
+        strategy must actually run the k-way walk, not fall back."""
+        seg = self._grow(57, 16, (57, 33, 41, 29), "kway")
+        assert seg.compact(strategy="kway") == 1
+        assert seg.compact_fallbacks == 0
+        assert seg.compact_strategy_counts == {"kway": 1}
+        plan = seg.compact_last_plan
+        assert plan["strategy"] == "kway" and plan["reason"] is None
+        assert plan["actual_walk_steps"] == plan["est_walk_steps"] > 0
+
+    @pytest.mark.parametrize("sigma", [2, 4, 16, 17])
+    def test_direct_merge_kway_matches_build(self, sigma):
+        """merge_kway on k=4 prepared docs == build_index_prepared on
+        their concatenation — every array, every aux field."""
+        from repro.core.bwt_merge import context_order_safe, merge_kway
+        from repro.core.fm_index import fm_mismatch
+        from repro.core.pipeline import build_index_prepared, prepare_tokens
+
+        r, srate = 8, 4
+        rng = np.random.default_rng(67 + sigma)
+        docs = [rng.integers(1, sigma, n).astype(np.int32)
+                for n in (45, 30, 22, 11)]
+        preps, sigs, fms = [], [], []
+        for d in docs:
+            s, sig = prepare_tokens(d, r, sigma)
+            preps.append(s)
+            sigs.append(sig)
+            fms.append(build_index_prepared(
+                s, sig, sample_rate=r, sa_sample_rate=srate).fm)
+        for i in range(len(preps) - 1):  # precondition of the k-way walk
+            assert context_order_safe(preps[i], np.concatenate(preps[i+1:]))
+        got = merge_kway(fms)
+        want = build_index_prepared(
+            np.concatenate(preps), max(sigs), sample_rate=r,
+            sa_sample_rate=srate).fm
+        assert not (d := fm_mismatch(got, want)), d
+
+    def test_unsafe_run_falls_back_with_telemetry(self):
+        """A run no candidate order can rescue — two *identical* merged
+        multi-doc segments whose texts end in a bare sentinel (the
+        self-similar tied tail is context-order unsafe in either
+        direction, and there is no single-doc segment to lead with) —
+        must NOT merge silently wrong: the planner detects it, warns,
+        counts the fallback, and the rebuild stays bit-identical to the
+        oracle."""
+        import warnings as _w
+
+        from repro.core.fm_index import fm_mismatch
+
+        r, srate, sigma = 8, 4, 4
+        d1 = np.full(7, 3, np.int32)  # 7 + sentinel = block: no pads
+        d2 = np.full(7, 1, np.int32)  # merged [d1,d2] text ends with 0
+
+        def grow(strategy):
+            seg = SegmentedIndex(sigma, sample_rate=r, sa_sample_rate=srate,
+                                 compact_strategy=strategy)
+            for d in (d1, d2, d1, d2):
+                seg.append(d)
+            for lo in (2, 0):  # pre-merge (d1,d2) pairs -> two multis
+                m = seg._merge_run(seg.segments[lo : lo + 2], "rebuild")
+                seg.segments = (seg.segments[:lo] + [m]
+                                + seg.segments[lo + 2 :])
+            seg._stacked_cache = None
+            seg.compact_strategy_counts = {}  # drop the setup merges' counts
+            return seg
+
+        oracle = grow("rebuild")
+        assert oracle.compact() == 1
+        for strategy in ("kway", "pairwise", "merge"):
+            seg = grow(strategy)
+            with pytest.warns(RuntimeWarning, match="fell back"):
+                assert seg.compact(strategy=strategy) == 1
+            assert seg.compact_fallbacks == 1
+            assert "context-order" in seg.compact_last_fallback_reason
+            assert seg.compact_strategy_counts == {"rebuild": 1}
+            assert not fm_mismatch(seg.segments[0].index.fm,
+                                   oracle.segments[0].index.fm)
+        _w.simplefilter("default")
+
+    def test_fallback_telemetry_survives_save_load(self, tmp_path):
+        """compact_fallbacks / last reason persist through the catalog."""
+        seg = SegmentedIndex(4, sample_rate=8, sa_sample_rate=4,
+                             compact_strategy="kway")
+        for d in (np.full(7, 3, np.int32), np.full(7, 1, np.int32)) * 2:
+            seg.append(d)
+        for lo in (2, 0):  # two identical multis: unrescuably unsafe
+            m = seg._merge_run(seg.segments[lo : lo + 2], "rebuild")
+            seg.segments = seg.segments[:lo] + [m] + seg.segments[lo + 2 :]
+        seg._stacked_cache = None
+        with pytest.warns(RuntimeWarning):
+            seg.compact()
+        seg.save(str(tmp_path))
+        loaded = SegmentedIndex.load(str(tmp_path))
+        assert loaded.compact_fallbacks == seg.compact_fallbacks == 1
+        assert loaded.compact_last_fallback_reason == \
+            seg.compact_last_fallback_reason

@@ -114,6 +114,11 @@ class TestFrontend:
         m = fe.metrics()
         assert m["shed_frac"] == pytest.approx(0.25)
         assert m["completed"] == 3
+        # compaction telemetry rides along even on a monolithic index
+        # (attribute-absent fallbacks): zero fallbacks, no reason, no counts
+        assert m["compact_fallbacks"] == 0
+        assert m["compact_last_fallback_reason"] is None
+        assert m["compact_strategy_counts"] == {}
 
     def test_burst_sheds_without_crashing(self, built):
         """Open-loop burst far above capacity: some requests shed, every
@@ -285,8 +290,11 @@ class TestFrontendFaults:
         """One injected merge crash during the growth op's compaction:
         the capped-backoff retry succeeds, nothing quarantines."""
         rng = np.random.default_rng(23)
+        # force the pairwise merge: the cost model would route this tiny
+        # run to the rebuild, and merge.mid only fires on the merge walk
         seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8,
-                             segment_min_tokens=1 << 10)
+                             segment_min_tokens=1 << 10,
+                             compact_strategy="pairwise")
         seg.append(rng.integers(1, SIGMA, 300).astype(np.int32))
         new = rng.integers(1, SIGMA, 120).astype(np.int32)
         with faultinject.inject(FaultSchedule([("merge.mid", 0)])):
@@ -304,8 +312,11 @@ class TestFrontendFaults:
         itself still lands, the pre-compact segments keep serving exactly,
         later appends skip compaction, and resume_compaction() recovers."""
         rng = np.random.default_rng(24)
+        # forced pairwise for the same reason as above: the armed
+        # merge.mid poison must sit on the executed compaction path
         seg = SegmentedIndex(SIGMA, sample_rate=16, sa_sample_rate=8,
-                             segment_min_tokens=1 << 10)
+                             segment_min_tokens=1 << 10,
+                             compact_strategy="pairwise")
         first = rng.integers(1, SIGMA, 300).astype(np.int32)
         seg.append(first)
         new = rng.integers(1, SIGMA, 120).astype(np.int32)
